@@ -1,0 +1,368 @@
+"""HLO-walking cost model with while-loop trip-count scaling.
+
+Why this exists: ``compiled.cost_analysis()`` counts a while-loop body ONCE
+(verified in tests/test_hlo_cost.py), but all our models iterate layers and
+attention/SSD chunks with ``lax.scan`` — so the roofline FLOPs/bytes must be
+derived by walking the optimized HLO and multiplying loop bodies by their
+trip counts.
+
+Accounting:
+  * FLOPs: dot (2·out_elems·contraction from the dot dnums), convolution
+    (2·out_elems·window·Cin/feature_groups), reduce (~1/input elem), plus
+    1/elem for elementwise ops — validated against cost_analysis on
+    loop-free modules in tests/test_hlo_cost.py.
+  * bytes: fusion-aware — the CPU backend barely fuses, while the TPU
+    compiler fuses elementwise chains into their producers, so counting
+    every CPU-HLO op's operands would wildly overstate HBM traffic. We count
+    operand+result bytes only at *materialization boundaries*: dot/conv/
+    reduce/sort, data movement (dynamic-(update-)slice, gather, scatter,
+    concatenate, copy), fusions (their operands/results), and collectives.
+    Pure elementwise/broadcast/compare ops are treated as fused (free).
+  * collective bytes: operand bytes of all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute, × enclosing trip
+    counts.
+  * trip counts: from each while condition's compare-against-constant
+    (max int constant in the condition computation — validated on knowns).
+
+Operands are printed as bare names in modern HLO, so the walker keeps a
+symbol table (op name → result type) per computation to resolve operand
+shapes.
+
+The walked HLO is the *per-device* partitioned module, so all results are
+per-chip already.
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*?)\s+"
+    r"([a-z][\w\-]*)\((.*)$")
+CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+CONST_RE = re.compile(r"constant\((\d+)\)")
+NAME_RE = re.compile(r"^%?([\w\.\-]+)$")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# ops whose operands/results genuinely move through HBM on TPU (elementwise
+# chains fuse into these producers/consumers and are not counted separately).
+# Slicing ops count only the *touched region*, not the full operand — a scan
+# body dynamic-slicing one layer out of stacked weights reads one layer's
+# bytes per iteration, not the whole stack.
+MATERIALIZING = {
+    "dot", "convolution", "reduce", "sort", "fusion",
+    "dynamic-slice", "dynamic-update-slice", "gather", "scatter",
+    "concatenate", "copy", "pad", "reverse", "slice",
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "custom-call",
+}
+
+# opcodes that do no arithmetic worth counting
+ZERO_FLOP = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "reshape", "transpose", "broadcast", "slice", "dynamic-slice",
+    "dynamic-update-slice", "concatenate", "copy", "copy-start",
+    "copy-done", "iota", "reverse", "pad", "gather", "scatter",
+    "while", "conditional", "call", "custom-call", "after-all",
+    "infeed", "outfeed", "rng", "rng-bit-generator", "convert",
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "partition-id", "replica-id", "fusion",
+    "optimization-barrier", "select", "compare",
+}
+
+
+def _elems(dims: str) -> int:
+    if not dims:
+        return 1
+    n = 1
+    for d in dims.split(","):
+        n *= int(d)
+    return n
+
+
+def shape_bytes(type_str: str) -> int:
+    return sum(DTYPE_BYTES[m.group(1)] * _elems(m.group(2))
+               for m in SHAPE_RE.finditer(type_str)
+               if m.group(1) in DTYPE_BYTES)
+
+
+def shape_elems(type_str: str) -> int:
+    return sum(_elems(m.group(2)) for m in SHAPE_RE.finditer(type_str)
+               if m.group(1) in DTYPE_BYTES)
+
+
+def shape_dims(type_str: str) -> List[int]:
+    m = SHAPE_RE.search(type_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",")]
+
+
+@dataclass
+class OpInfo:
+    name: str
+    out_type: str
+    opcode: str
+    rest: str
+    operands: List[str] = field(default_factory=list)
+
+
+def _parse_operands(rest: str) -> List[str]:
+    """Names (or inline types) inside the top-level parens of op(...)."""
+    depth = 1
+    buf = []
+    out = []
+    for ch in rest:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        if depth >= 1:
+            if ch == "," and depth == 1:
+                out.append("".join(buf).strip())
+                buf = []
+            else:
+                buf.append(ch)
+    if buf:
+        out.append("".join(buf).strip())
+    return [o for o in out if o]
+
+
+@dataclass
+class CompCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_detail: Dict[str, float] = field(default_factory=dict)
+
+    def add_scaled(self, other: "CompCost", k: float = 1.0,
+                   include_bytes: bool = True):
+        self.flops += k * other.flops
+        if include_bytes:
+            self.bytes += k * other.bytes
+        self.coll_bytes += k * other.coll_bytes
+        for key, v in other.coll_detail.items():
+            self.coll_detail[key] = self.coll_detail.get(key, 0) + k * v
+
+
+def _split_computations(text: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur: Optional[str] = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        if cur is None:
+            if "(" in line and line.rstrip().endswith("{"):
+                m = re.match(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(", line)
+                if m:
+                    cur = m.group(1)
+                    comps[cur] = []
+        else:
+            if stripped == "}" or line.startswith("}"):
+                cur = None
+            else:
+                comps[cur].append(line)
+    return comps
+
+
+class HloCostModel:
+    def __init__(self, text: str):
+        self.comps = _split_computations(text)
+        self._ops: Dict[str, List[OpInfo]] = {}
+        self._types: Dict[str, Dict[str, str]] = {}
+        self._global_types: Dict[str, str] = {}
+        for name, lines in self.comps.items():
+            ops = []
+            types: Dict[str, str] = {}
+            for ln in lines:
+                m = OP_RE.match(ln)
+                if m:
+                    op = OpInfo(m.group(1), m.group(2), m.group(3),
+                                m.group(4))
+                    op.operands = _parse_operands(op.rest)
+                    ops.append(op)
+                    types[op.name] = op.out_type
+                    self._global_types[op.name] = op.out_type
+            self._ops[name] = ops
+            self._types[name] = types
+        self.entry = self._find_entry(text)
+        self._memo: Dict[str, CompCost] = {}
+
+    def _find_entry(self, text: str) -> str:
+        m = re.search(r"^ENTRY\s+%?([\w\.\-]+)", text, re.M)
+        if m:
+            return m.group(1)
+        for name in self.comps:
+            if "main" in name:
+                return name
+        return next(iter(self.comps))
+
+    # ------------------------------------------------------------------
+    def _resolve(self, comp: str, token: str) -> str:
+        """Operand token -> type string ('' if unresolvable)."""
+        if "[" in token:
+            return token                       # inline type (old format)
+        m = NAME_RE.match(token)
+        if not m:
+            return ""
+        name = m.group(1)
+        return self._types.get(comp, {}).get(name) \
+            or self._global_types.get(name, "")
+
+    def _operand_types(self, comp: str, op: OpInfo) -> List[str]:
+        return [self._resolve(comp, t) for t in op.operands]
+
+    def trip_count(self, cond_name: str) -> int:
+        consts = [int(c) for ln in self.comps.get(cond_name, [])
+                  for c in CONST_RE.findall(ln)]
+        return max(consts) if consts else 1
+
+    # ------------------------------------------------------------------
+    def _dot_flops(self, comp: str, op: OpInfo) -> float:
+        out_elems = shape_elems(op.out_type)
+        otypes = self._operand_types(comp, op)
+        lhs = shape_dims(otypes[0]) if otypes else []
+        contract = 1
+        mcon = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+        if mcon and mcon.group(1) and lhs:
+            for i in mcon.group(1).split(","):
+                if int(i) < len(lhs):
+                    contract *= lhs[int(i)]
+        return 2.0 * out_elems * contract
+
+    def _conv_flops(self, comp: str, op: OpInfo) -> float:
+        out_elems = shape_elems(op.out_type)
+        window = 1
+        mw = re.search(r"window=\{size=([\dx]+)", op.rest)
+        if mw:
+            for d in mw.group(1).split("x"):
+                window *= int(d)
+        fg = 1
+        mg = re.search(r"feature_group_count=(\d+)", op.rest)
+        if mg:
+            fg = int(mg.group(1))
+        otypes = self._operand_types(comp, op)
+        cin = 1
+        if len(otypes) >= 2:
+            kdims = shape_dims(otypes[1])
+            if len(kdims) >= 2:
+                cin = kdims[-2]      # kernel layout ...,(in/fg),out
+        return 2.0 * out_elems * window * cin
+
+    # ------------------------------------------------------------------
+    def _op_bytes(self, comp: str, op: OpInfo) -> float:
+        """HBM traffic attributed to one op (TPU fusion-aware; see header)."""
+        oc = op.opcode
+        out_b = shape_bytes(op.out_type)
+        if oc in ("dynamic-slice", "slice", "gather"):
+            return 2.0 * out_b            # read touched region + write out
+        if oc in ("dynamic-update-slice", "scatter"):
+            otypes = self._operand_types(comp, op)
+            upd = shape_bytes(otypes[1]) if len(otypes) > 1 else out_b
+            return 2.0 * upd              # read + write the touched region
+        if oc == "fusion":
+            m = CALLS_RE.search(op.rest)
+            inner = 0.0
+            dus_sized = 0
+            if m:
+                callee = m.group(1)
+                for iop in self._ops.get(callee, []):
+                    if iop.opcode == "dynamic-update-slice":
+                        dus_sized = max(dus_sized, shape_bytes(iop.out_type))
+                    if iop.opcode in MATERIALIZING and iop.opcode != "fusion":
+                        inner += self._op_bytes(callee, iop)
+            if dus_sized and dus_sized >= 0.5 * out_b:
+                # scan-stacking / in-place-update fusion: on TPU the output
+                # buffer is aliased and only the updated slice is written
+                # (the interior DUS rule already counted the touched region)
+                return inner
+            return out_b + inner
+        if oc in MATERIALIZING:
+            otypes = self._operand_types(comp, op)
+            return out_b + sum(shape_bytes(t) for t in otypes)
+        return 0.0
+
+    def comp_cost(self, name: str, top_level: bool = True) -> CompCost:
+        key = f"{name}|{top_level}"
+        if key in self._memo:
+            return self._memo[key]
+        cost = CompCost()
+        self._memo[key] = cost     # guard against recursive custom-calls
+        for op in self._ops.get(name, []):
+            oc = op.opcode
+            otypes = self._operand_types(name, op)
+            # ---- FLOPs ---------------------------------------------------
+            if oc == "dot":
+                cost.flops += self._dot_flops(name, op)
+            elif oc == "convolution":
+                cost.flops += self._conv_flops(name, op)
+            elif oc == "fusion":
+                m = CALLS_RE.search(op.rest)
+                if m:
+                    cost.add_scaled(
+                        self.comp_cost(m.group(1), top_level=False),
+                        include_bytes=False)
+            elif oc == "while":
+                body = BODY_RE.search(op.rest)
+                cond = COND_RE.search(op.rest)
+                trips = self.trip_count(cond.group(1)) if cond else 1
+                if body:
+                    cost.add_scaled(
+                        self.comp_cost(body.group(1), top_level=True),
+                        k=trips)
+            elif oc in ("call", "conditional"):
+                for m in re.finditer(r"(?:calls|to_apply)=%?([\w\.\-]+)",
+                                     op.rest):
+                    if m.group(1) in self.comps:
+                        cost.add_scaled(
+                            self.comp_cost(m.group(1), top_level=True))
+            elif oc == "reduce":
+                cost.flops += sum(shape_elems(t) for t in otypes)
+            elif oc not in ZERO_FLOP:
+                cost.flops += shape_elems(op.out_type)
+
+            # ---- bytes (materialization boundaries only; see docstring) --
+            if top_level and oc in MATERIALIZING:
+                cost.bytes += self._op_bytes(name, op)
+
+            # ---- collectives ---------------------------------------------
+            if oc in COLLECTIVES:
+                b = sum(shape_bytes(t) for t in otypes)
+                cost.coll_bytes += b
+                cost.coll_detail[oc] = cost.coll_detail.get(oc, 0) + b
+        self._memo[key] = cost
+        return cost
+
+    def total(self) -> CompCost:
+        self._memo.clear()
+        return self.comp_cost(self.entry, top_level=True)
+
+
+def analyze_text(text: str) -> Dict[str, float]:
+    model = HloCostModel(text)
+    c = model.total()
+    return {"flops": c.flops, "bytes": c.bytes,
+            "collective_bytes": c.coll_bytes,
+            "collectives": dict(c.coll_detail)}
+
+
+def analyze_file(path) -> Dict[str, float]:
+    import gzip
+    opener = gzip.open if str(path).endswith(".gz") else open
+    with opener(path, "rt") as f:
+        return analyze_text(f.read())

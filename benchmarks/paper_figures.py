@@ -1,0 +1,146 @@
+"""One benchmark per paper table/figure (calibrated-simulator reproductions
+plus a real-execution micro-benchmark of the scheduler runtime).
+
+Fig. 1e  chunk-size -> effective accelerator throughput curve
+Table 1  tuned G per platform (chunk search on the platform curve)
+Fig. 2   Dynamic vs Bulk-Oracle, 3+1 / 4+1, time & energy & EDP
+Fig. 5   overhead breakdown O_sp/O_hd/O_kl/O_dh/O_td
+Fig. 6   Dynamic Pri
+Fig. 7   big.LITTLE 3+1..8+1 with Pri
+"""
+from __future__ import annotations
+
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.core import (EXYNOS, HASWELL, IVY, PLATFORMS, SimConfig,
+                        bulk_oracle, occupancy_seed, run_config, search_chunk,
+                        simulate)
+
+
+def rows_fig1e():
+    """chunk -> effective throughput (exec + transfers + launch), Haswell."""
+    plat = HASWELL
+    out = []
+    for chunk in (320, 640, 1280, 2048, 4096, 8192, 16384):
+        lam = plat.accel(chunk)
+        t = plat.t_hd_ms + plat.t_kl_ms + chunk / lam + plat.t_dh_ms
+        out.append((f"fig1e/chunk_{chunk}", t * 1e3 / chunk,
+                    f"eff_thpt={chunk / t:.1f}it/ms"))
+    return out
+
+
+def rows_table1():
+    out = []
+    for name, plat in PLATFORMS.items():
+        seed = occupancy_seed(20, 16)      # paper's Haswell-style seed
+
+        def eff(chunk):
+            t = plat.t_hd_ms + plat.t_kl_ms + chunk / plat.accel(chunk) \
+                + plat.t_dh_ms
+            return chunk / t
+
+        tr = search_chunk(eff, seed, multiples=64)
+        out.append((f"table1/G_{name}", 0.0,
+                    f"G={tr.best_chunk};paper={plat.G_opt}"))
+    return out
+
+
+def rows_fig2():
+    out = []
+    for name, plat in PLATFORMS.items():
+        base = bulk_oracle(plat, "3+1", timesteps=15)
+        for lbl in ("3+1", "4+1"):
+            b = bulk_oracle(plat, lbl, timesteps=15)
+            d = run_config(plat, lbl, timesteps=15)
+            out.append((f"fig2/{name}/bulk_{lbl}", b.time_ms * 1e3 / 15,
+                        f"t={b.time_ms / base.time_ms:.3f};"
+                        f"E={b.energy.total_j / base.energy.total_j:.3f};"
+                        f"EDP={b.edp / base.edp:.3f}"))
+            out.append((f"fig2/{name}/dynamic_{lbl}", d.time_ms * 1e3 / 15,
+                        f"t={d.time_ms / base.time_ms:.3f};"
+                        f"E={d.energy.total_j / base.energy.total_j:.3f};"
+                        f"EDP={d.edp / base.edp:.3f}"))
+    return out
+
+
+def rows_fig5():
+    out = []
+    for name, plat in PLATFORMS.items():
+        for lbl in ("3+1", "4+1"):
+            for pri in (False, True):
+                r = run_config(plat, lbl, priority=pri, timesteps=15)
+                tag = "pri" if pri else "dyn"
+                ov = r.overheads
+                out.append((
+                    f"fig5/{name}/{tag}_{lbl}", r.time_ms * 1e3 / 15,
+                    f"O_sp={ov['O_sp']:.4f};O_hd={ov['O_hd']:.4f};"
+                    f"O_kl={ov['O_kl']:.4f};O_dh={ov['O_dh']:.4f};"
+                    f"O_td={ov['O_td']:.4f}"))
+    return out
+
+
+def rows_fig6():
+    out = []
+    for name, plat in PLATFORMS.items():
+        d = run_config(plat, "4+1", timesteps=75)
+        p = run_config(plat, "4+1", priority=True, timesteps=75)
+        a = run_config(plat, "4+1", async_depth=2, timesteps=75)
+        out.append((f"fig6/{name}/pri_vs_dyn", p.time_ms * 1e3 / 75,
+                    f"dt={1 - p.time_ms / d.time_ms:.3f};"
+                    f"dE={1 - p.energy.total_j / d.energy.total_j:.3f};"
+                    f"dEDP={1 - p.edp / d.edp:.3f}"))
+        out.append((f"fig6/{name}/async2_vs_dyn", a.time_ms * 1e3 / 75,
+                    f"dt={1 - a.time_ms / d.time_ms:.3f};"
+                    f"dEDP={1 - a.edp / d.edp:.3f}"))
+    return out
+
+
+def rows_fig7():
+    plat = EXYNOS
+    out = []
+    base = run_config(plat, "4+1", timesteps=75)
+    for lbl in ("3+1", "4+1", "7+1", "8+1"):
+        for pri in (False, True):
+            for pin in ("big", "little"):
+                r = run_config(plat, lbl, priority=pri, host_pin=pin,
+                               timesteps=75)
+                tag = ("pri-" if pri else "") + \
+                    ("a7" if pin == "little" else "a15")
+                out.append((
+                    f"fig7/{tag}_{lbl}", r.time_ms * 1e3 / 75,
+                    f"t={r.time_ms / base.time_ms:.3f};"
+                    f"E={r.energy.total_j / base.energy.total_j:.3f};"
+                    f"EDP={r.edp / base.edp:.3f}"))
+    return out
+
+
+def rows_realexec():
+    """Real-execution scheduler micro-benchmark (SleepExecutor devices):
+    measures the runtime's own dispatch overheads on this host."""
+    from repro.core import (DeviceKind, DynamicScheduler, GroupSpec,
+                            SleepExecutor)
+    groups = {
+        "accel": GroupSpec("accel", DeviceKind.ACCEL, fixed_chunk=512,
+                           init_throughput=400_000),
+        "cpu0": GroupSpec("cpu0", DeviceKind.BIG, init_throughput=100_000,
+                          min_chunk=8),
+    }
+    execs = {"accel": SleepExecutor(rate=400_000),
+             "cpu0": SleepExecutor(rate=100_000)}
+    s = DynamicScheduler(groups, execs, alpha=0.5)
+    t0 = time.monotonic()
+    res = s.run(0, 50_000)
+    wall = time.monotonic() - t0
+    ov = res.overheads["accel"]
+    n = max(ov["n_chunks"], 1)
+    return [("realexec/scheduler_50k", wall * 1e6 / n,
+             f"O_sp={ov['O_sp']:.4f};O_td={ov['O_td']:.4f};"
+             f"chunks={int(n)}")]
+
+
+ALL = [rows_fig1e, rows_table1, rows_fig2, rows_fig5, rows_fig6, rows_fig7,
+       rows_realexec]

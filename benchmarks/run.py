@@ -1,0 +1,28 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  The simulator figures are exact
+reproductions of the paper's experiment grid (calibration in
+repro/core/platforms.py); `realexec/` rows exercise the actual threaded
+scheduler runtime on this host.
+
+Run:  PYTHONPATH=src python -m benchmarks.run
+"""
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+
+def main() -> None:
+    from benchmarks.paper_figures import ALL
+    print("name,us_per_call,derived")
+    for fn in ALL:
+        for name, us, derived in fn():
+            print(f"{name},{us:.3f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,150 @@
+"""Atomic checkpointing (the restart half of fault tolerance).
+
+Layout: <dir>/step_<n>/ {meta.json, arrays.npz}; writes go to a tmp dir that
+is os.rename()'d into place (atomic on POSIX), so a crash mid-save never
+corrupts the latest checkpoint. Optional async save on a background thread
+(training continues while the previous step serializes). keep_n garbage
+collection. Trees are flattened with '/'-joined key paths.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+import ml_dtypes
+import numpy as np
+
+# numpy cannot natively serialize these; store a viewed array + dtype sidecar
+_EXOTIC_DTYPES = {
+    "bfloat16": (ml_dtypes.bfloat16, np.uint16),
+    "float8_e4m3fn": (ml_dtypes.float8_e4m3fn, np.uint8),
+    "float8_e5m2": (ml_dtypes.float8_e5m2, np.uint8),
+}
+
+
+def _flatten(tree, prefix="") -> Dict[str, Any]:
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    else:
+        out[prefix[:-1]] = tree
+    return out
+
+
+def _unflatten(flat: Dict[str, Any]):
+    root: Dict = {}
+    for key, v in flat.items():
+        parts = key.split("/")
+        d = root
+        for p in parts[:-1]:
+            d = d.setdefault(p, {})
+        d[parts[-1]] = v
+
+    def fix(node):
+        if isinstance(node, dict) and node and \
+                all(k.isdigit() for k in node):
+            return tuple(fix(node[str(i)]) for i in range(len(node)))
+        if isinstance(node, dict):
+            return {k: fix(v) for k, v in node.items()}
+        return node
+
+    return fix(root)
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep_n: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep_n = keep_n
+        self._async_thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, tree: Dict, meta: Optional[Dict] = None):
+        flat = _flatten(tree)
+        arrays = {}
+        dtype_sidecar = {}
+        for k, v in flat.items():
+            a = np.asarray(v)
+            for name, (dt, carrier) in _EXOTIC_DTYPES.items():
+                if a.dtype == dt:
+                    dtype_sidecar[k] = name
+                    a = a.view(carrier)
+                    break
+            arrays[k] = a
+        tmp = self.dir / f".tmp_step_{step}_{os.getpid()}_{time.time_ns()}"
+        tmp.mkdir(parents=True)
+        try:
+            np.savez(tmp / "arrays.npz", **arrays)
+            (tmp / "meta.json").write_text(json.dumps(
+                {"step": step, "time": time.time(),
+                 "_dtypes": dtype_sidecar, **(meta or {})}))
+            final = self.dir / f"step_{step}"
+            if final.exists():
+                shutil.rmtree(final)
+            os.rename(tmp, final)
+        finally:
+            if tmp.exists():
+                shutil.rmtree(tmp, ignore_errors=True)
+        self._gc()
+        return self.dir / f"step_{step}"
+
+    def save_async(self, step: int, tree: Dict,
+                   meta: Optional[Dict] = None) -> threading.Thread:
+        self.wait()
+        # materialize to host BEFORE backgrounding so the device buffers are
+        # free to be donated by the next step
+        flat = {k: np.asarray(v) for k, v in _flatten(tree).items()}
+        th = threading.Thread(
+            target=lambda: self.save(step, flat, meta), daemon=True)
+        self._async_thread = th
+        th.start()
+        return th
+
+    def wait(self):
+        if self._async_thread is not None:
+            self._async_thread.join()
+            self._async_thread = None
+
+    # ------------------------------------------------------------------
+    def steps(self):
+        out = []
+        for p in self.dir.glob("step_*"):
+            try:
+                out.append(int(p.name.split("_")[1]))
+            except ValueError:
+                continue
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        s = self.steps()
+        return s[-1] if s else None
+
+    def restore(self, step: Optional[int] = None) -> Tuple[Dict, Dict]:
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        d = self.dir / f"step_{step}"
+        meta = json.loads((d / "meta.json").read_text())
+        sidecar = meta.get("_dtypes", {})
+        with np.load(d / "arrays.npz") as z:
+            flat = {}
+            for k in z.files:
+                a = z[k]
+                if k in sidecar:
+                    a = a.view(_EXOTIC_DTYPES[sidecar[k]][0])
+                flat[k] = a
+        return _unflatten(flat), meta
+
+    def _gc(self):
+        steps = self.steps()
+        for s in steps[:-self.keep_n]:
+            shutil.rmtree(self.dir / f"step_{s}", ignore_errors=True)

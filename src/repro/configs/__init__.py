@@ -1,0 +1,7 @@
+from repro.configs.base import (LMConfig, MoEConfig, SSMConfig, XLSTMConfig,
+                                HybridConfig, ShapeSuite, SHAPES,
+                                SHAPES_BY_NAME, shape_applicable, reduced)
+
+__all__ = ["LMConfig", "MoEConfig", "SSMConfig", "XLSTMConfig", "HybridConfig",
+           "ShapeSuite", "SHAPES", "SHAPES_BY_NAME", "shape_applicable",
+           "reduced"]

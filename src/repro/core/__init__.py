@@ -1,0 +1,32 @@
+"""Core library: the paper's dynamic heterogeneous chunk scheduler.
+
+Paper: "Reducing overheads of dynamic scheduling on heterogeneous chips"
+(Corbera et al., 2015), adapted for JAX/TPU fleets — see DESIGN.md §2.
+"""
+from repro.core.types import (Chunk, ChunkRecord, DeviceKind, GroupSpec,
+                              IterationSpace, Token)
+from repro.core.throughput import ThroughputTracker, GroupStats
+from repro.core.partitioner import HeterogeneousPartitioner
+from repro.core.chunk_search import SearchTrace, occupancy_seed, search_chunk
+from repro.core.overheads import OverheadLedger, OverheadTotals
+from repro.core.dispatch import (CallableExecutor, ChunkExecutor,
+                                 ChunkFailure, JaxChunkExecutor,
+                                 SleepExecutor, try_boost_priority)
+from repro.core.scheduler import DynamicScheduler, ScheduleResult
+from repro.core.energy import EnergyModel, EnergyReport, PowerSpec
+from repro.core.oracle import BulkScheduler, BulkResult
+from repro.core.platforms import IVY, HASWELL, EXYNOS, PLATFORMS, Platform
+from repro.core.simulate import SimConfig, SimResult, simulate, run_config, \
+    bulk_oracle
+
+__all__ = [
+    "Chunk", "ChunkRecord", "DeviceKind", "GroupSpec", "IterationSpace",
+    "Token", "ThroughputTracker", "GroupStats", "HeterogeneousPartitioner",
+    "SearchTrace", "occupancy_seed", "search_chunk", "OverheadLedger",
+    "OverheadTotals", "CallableExecutor", "ChunkExecutor", "ChunkFailure",
+    "JaxChunkExecutor", "SleepExecutor", "try_boost_priority",
+    "DynamicScheduler", "ScheduleResult", "EnergyModel", "EnergyReport",
+    "PowerSpec", "BulkScheduler", "BulkResult", "IVY", "HASWELL", "EXYNOS",
+    "PLATFORMS", "Platform", "SimConfig", "SimResult", "simulate",
+    "run_config", "bulk_oracle",
+]

@@ -1,0 +1,166 @@
+"""Chunk executors: how a device group processes a chunk (Filter₂).
+
+Executors fill the device-side timestamps of ChunkRecord:
+  tg1→tg2  host-to-device transfer (jax.device_put of the chunk's inputs)
+  tg2→tg3  dispatch / launch (the jitted call returning — async under JAX)
+  tg3→tg4  device execution (until outputs are ready)
+  tg4→tg5  device-to-host fetch of (small) results/metrics
+
+`async_depth` is the TPU-idiomatic *Dynamic Pri*: with depth ≥ 2 the next
+chunk is dispatched before the previous completes, so the device never waits
+for the host thread to be rescheduled (the paper's O_td collapses). Depth 1
+reproduces the paper's baseline Dynamic (synchronous clFinish()).
+
+`priority_boost` is the literal paper optimization: raise the host/dispatch
+thread's OS priority (best-effort `os.nice`; needs privileges to raise).
+"""
+from __future__ import annotations
+
+import collections
+import os
+import threading
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
+
+from repro.core.types import ChunkRecord, Token
+
+clock = time.monotonic
+
+
+class ChunkFailure(RuntimeError):
+    """Raised by an executor when its device group dies mid-chunk."""
+
+
+def try_boost_priority(delta: int = -10) -> bool:
+    """Best-effort SetThreadPriority analogue. Lowering niceness requires
+    privileges; returns whether the boost took effect."""
+    try:
+        os.nice(delta)
+        return True
+    except (PermissionError, OSError):
+        return False
+
+
+class ChunkExecutor:
+    """Interface. execute() may complete earlier in-flight work; drain()
+    flushes the pipeline at end-of-stream."""
+
+    def on_worker_start(self) -> None:
+        pass
+
+    def execute(self, token: Token, rec: ChunkRecord) -> List[ChunkRecord]:
+        raise NotImplementedError
+
+    def drain(self) -> List[ChunkRecord]:
+        return []
+
+
+class CallableExecutor(ChunkExecutor):
+    """Synchronous executor around fn(token) -> meta dict (or None)."""
+
+    def __init__(self, fn: Callable[[Token], Optional[Dict]],
+                 priority_boost: bool = False):
+        self.fn = fn
+        self.priority_boost = priority_boost
+        self.boosted = False
+
+    def on_worker_start(self) -> None:
+        if self.priority_boost:
+            self.boosted = try_boost_priority()
+
+    def execute(self, token: Token, rec: ChunkRecord) -> List[ChunkRecord]:
+        rec.tg1 = rec.tg2 = rec.tg3 = clock()
+        meta = self.fn(token)
+        rec.tg4 = rec.tg5 = clock()
+        if meta:
+            rec.meta.update(meta)
+        return [rec]
+
+
+class JaxChunkExecutor(ChunkExecutor):
+    """Runs a jitted step on a JAX device group with measured offload phases.
+
+    make_inputs(token) -> pytree of host (numpy) arrays for the chunk
+    step(*device_inputs) -> outputs pytree (device)
+    fetch(outputs) -> small host metrics (device-to-host phase)
+    """
+
+    def __init__(self, step: Callable, make_inputs: Callable[[Token], Any],
+                 fetch: Optional[Callable[[Any], Any]] = None,
+                 device=None, async_depth: int = 1,
+                 priority_boost: bool = False):
+        import jax
+        self.jax = jax
+        self.step = step
+        self.make_inputs = make_inputs
+        self.fetch = fetch or (lambda outs: None)
+        self.device = device
+        self.async_depth = max(1, async_depth)
+        self.priority_boost = priority_boost
+        self.boosted = False
+        self._inflight: Deque[Tuple[ChunkRecord, Any]] = collections.deque()
+
+    def on_worker_start(self) -> None:
+        if self.priority_boost:
+            self.boosted = try_boost_priority()
+
+    def _complete_oldest(self) -> ChunkRecord:
+        rec, outs = self._inflight.popleft()
+        self.jax.block_until_ready(outs)
+        rec.tg4 = clock()
+        res = self.fetch(outs)
+        rec.tg5 = clock()
+        if res is not None:
+            rec.meta["result"] = res
+        return rec
+
+    def execute(self, token: Token, rec: ChunkRecord) -> List[ChunkRecord]:
+        done: List[ChunkRecord] = []
+        while len(self._inflight) >= self.async_depth:
+            done.append(self._complete_oldest())
+        host_inputs = self.make_inputs(token)
+        rec.tg1 = clock()
+        dev_inputs = self.jax.device_put(host_inputs, self.device) \
+            if self.device is not None else self.jax.device_put(host_inputs)
+        rec.tg2 = clock()
+        outs = self.step(*dev_inputs) if isinstance(dev_inputs, tuple) \
+            else self.step(dev_inputs)
+        rec.tg3 = clock()                       # dispatch returned (async)
+        self._inflight.append((rec, outs))
+        if self.async_depth == 1:
+            done.append(self._complete_oldest())
+        return done
+
+    def drain(self) -> List[ChunkRecord]:
+        out = []
+        while self._inflight:
+            out.append(self._complete_oldest())
+        return out
+
+
+class SleepExecutor(ChunkExecutor):
+    """Deterministic executor for scheduler unit tests: service time is
+    chunk.size / rate plus fixed per-phase overheads."""
+
+    def __init__(self, rate: float, t_hd: float = 0.0, t_kl: float = 0.0,
+                 t_dh: float = 0.0, fail_after: Optional[int] = None):
+        self.rate = rate
+        self.t_hd, self.t_kl, self.t_dh = t_hd, t_kl, t_dh
+        self.fail_after = fail_after
+        self._count = 0
+
+    def execute(self, token: Token, rec: ChunkRecord) -> List[ChunkRecord]:
+        self._count += 1
+        if self.fail_after is not None and self._count > self.fail_after:
+            raise ChunkFailure(f"group {token.group} died")
+        rec.tg1 = clock()
+        time.sleep(self.t_hd)
+        rec.tg2 = clock()
+        time.sleep(self.t_kl)
+        rec.tg3 = clock()
+        time.sleep(token.chunk.size / self.rate)
+        rec.tg4 = clock()
+        time.sleep(self.t_dh)
+        rec.tg5 = clock()
+        return [rec]

@@ -1,0 +1,93 @@
+"""Heterogeneous dynamic partitioner — the paper's §3.2 (Partitioner_H).
+
+Policy (Navarro et al. heuristic, eqs. 3–4):
+  * an ACCEL group always receives its tuned optimal chunk G;
+  * any other group receives C = G_ref · λ_self / λ_ref, where ref is the
+    (fastest) accelerator group — i.e. every chunk is sized to take the same
+    wall time as the accelerator's chunk, balancing load while every device
+    runs at its throughput-optimal size;
+  * if no accelerator exists, chunks are proportional to a base quantum.
+
+The partitioner is work-conserving: it never hands out more iterations than
+remain, and the final chunks shrink to exhaust the space exactly (property-
+tested in tests/test_properties.py).
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, Optional
+
+from repro.core.throughput import ThroughputTracker
+from repro.core.types import Chunk, DeviceKind, GroupSpec, IterationSpace, \
+    Token
+
+
+class HeterogeneousPartitioner:
+    def __init__(self, space: IterationSpace, groups: Dict[str, GroupSpec],
+                 tracker: ThroughputTracker,
+                 base_quantum: int = 256):
+        self.space = space
+        self.groups = dict(groups)
+        self.tracker = tracker
+        self.base_quantum = base_quantum
+        self._lock = threading.Lock()
+        accels = [g for g in self.groups.values()
+                  if g.kind == DeviceKind.ACCEL]
+        self._ref: Optional[GroupSpec] = accels[0] if accels else None
+        for g in self.groups.values():
+            tracker.seed(g.name, g.init_throughput)
+
+    # ------------------------------------------------------------------
+    def add_group(self, spec: GroupSpec) -> None:
+        """Elastic join: the group starts receiving λ-proportional chunks."""
+        with self._lock:
+            self.groups[spec.name] = spec
+            self.tracker.seed(spec.name, spec.init_throughput)
+            if spec.kind == DeviceKind.ACCEL and self._ref is None:
+                self._ref = spec
+
+    def remove_group(self, name: str) -> None:
+        """Elastic leave / failure: stop scheduling to the group."""
+        with self._lock:
+            self.groups.pop(name, None)
+            if self._ref is not None and self._ref.name == name:
+                accels = [g for g in self.groups.values()
+                          if g.kind == DeviceKind.ACCEL]
+                self._ref = accels[0] if accels else None
+
+    # ------------------------------------------------------------------
+    def chunk_size_for(self, name: str) -> int:
+        g = self.groups[name]
+        if g.kind == DeviceKind.ACCEL and g.fixed_chunk:
+            size = g.fixed_chunk
+        elif self._ref is not None and self._ref.fixed_chunk:
+            lam_ref = self.tracker.get(self._ref.name)
+            lam = self.tracker.get(name)
+            size = int(round(self._ref.fixed_chunk * lam
+                             / max(lam_ref, 1e-12)))          # eq. (4)
+        else:
+            # homogeneous fallback: quantum scaled by relative λ
+            lams = self.tracker.snapshot()
+            mx = max(lams.values()) if lams else 1.0
+            size = int(round(self.base_quantum
+                             * self.tracker.get(name) / max(mx, 1e-12)))
+        size = max(size, g.min_chunk)
+        if g.max_chunk:
+            size = min(size, g.max_chunk)
+        return size
+
+    def next_token(self, name: str) -> Optional[Token]:
+        """Filter₁ body for a device that just became idle."""
+        with self._lock:
+            if name not in self.groups:
+                return None
+            g = self.groups[name]
+            chunk = self.space.take(self.chunk_size_for(name))
+            if chunk is None:
+                return None
+            return Token(chunk, g.name, g.kind)
+
+    def requeue(self, chunk: Chunk) -> None:
+        """Fault tolerance: a failed/lost chunk re-enters the space."""
+        with self._lock:
+            self.space.put_back(chunk)

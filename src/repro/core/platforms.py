@@ -1,0 +1,108 @@
+"""Calibrated platform models for the paper's three testbeds (§4.1).
+
+Where the paper reports a number we use it directly (G, kernel-launch times,
+transfer overhead fractions, Bulk-Oracle optimal splits, OS policy). Where it
+reports only ratios (throughputs are never absolute for the Intel boxes) we
+pick a scale and calibrate the free parameters so the paper's *measured
+baselines* come out (Table 1, Fig. 5); the simulator then *predicts* the
+optimization results (Fig. 2/6/7), which is what tests/test_paper_claims.py
+asserts. Calibrated-vs-paper values are tabulated in EXPERIMENTS.md.
+
+Throughput ratios derived from Table 1 (Bulk-Oracle split p with 3 cores):
+λ_G/λ_C = 3p/(1-p):  Ivy p=50% → 3.0 ; Haswell p=70% → 7.0 ; Exynos p=20% → 0.75.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict
+
+from repro.core.energy import PowerSpec
+
+
+@dataclass(frozen=True)
+class AccelCurve:
+    """λ(chunk) for the accelerator: occupancy ramp below c_occ, cache-miss
+    penalty beyond the knee (paper Fig. 1), floored (calibrated vs Fig. 2)."""
+    peak: float                  # iters/ms at the sweet spot
+    c_occ: int                   # minimal fully-occupying chunk (§3.2 seed)
+    knee: int                    # chunk size where L3 misses start to bite
+    floor: float                 # min fraction of peak at huge chunks
+
+    def __call__(self, chunk: int) -> float:
+        import math
+        occ = min(1.0, chunk / self.c_occ)
+        pen = 1.0
+        if chunk > self.knee:
+            pen = max(self.floor,
+                      1.0 / (1.0 + 0.15 * math.log2(chunk / self.knee)))
+        return self.peak * occ * pen
+
+
+@dataclass(frozen=True)
+class Platform:
+    name: str
+    n_big: int                   # CPU cores (A15s on Exynos)
+    n_little: int
+    lam_big: float               # iters/ms per big core (calibration scale)
+    lam_little: float
+    accel: AccelCurve
+    G_opt: int                   # Table 1 tuned GPU chunk
+    bulk_frac: Dict[str, float]  # Table 1 Bulk-Oracle optimal % {cfg: frac}
+    t_kl_ms: float               # §4.2 measured kernel-launch time
+    t_hd_ms: float               # per-chunk host->device time
+    t_dh_ms: float
+    os_policy: str               # "rr" (Windows) | "fair" (Linux wake boost)
+    td_wait_ms: float            # calibrated RR dispatch wait (Fig. 5)
+    td_wait_fair_ms: float = 0.0 # residual wake delay under fair+oversub
+    eps_ms: float = 0.05         # context-switch / boosted-dispatch latency
+    sp_ms: float = 0.01          # scheduling+partitioning per chunk (O_sp)
+    power: Dict[str, PowerSpec] = field(default_factory=dict)
+    base_w: float = 0.0
+
+
+IVY = Platform(
+    name="ivy",
+    n_big=4, n_little=0,
+    lam_big=25.0, lam_little=0.0,
+    accel=AccelCurve(peak=75.0, c_occ=1536, knee=1536, floor=0.87),
+    G_opt=1536,
+    bulk_frac={"3+1": 0.5, "4+1": 0.4},
+    t_kl_ms=1.8, t_hd_ms=0.05, t_dh_ms=0.05,
+    os_policy="rr", td_wait_ms=6.3,
+    power={"big": PowerSpec(11.0, 1.5), "accel": PowerSpec(15.0, 3.0)},
+    base_w=10.0,
+)
+
+HASWELL = Platform(
+    name="haswell",
+    n_big=4, n_little=0,
+    lam_big=22.0, lam_little=0.0,
+    accel=AccelCurve(peak=154.0, c_occ=2048, knee=2048, floor=0.97),
+    G_opt=2048,
+    bulk_frac={"3+1": 0.7, "4+1": 0.7},
+    t_kl_ms=1.0, t_hd_ms=0.05, t_dh_ms=0.05,
+    os_policy="rr", td_wait_ms=7.1,
+    power={"big": PowerSpec(12.0, 1.5), "accel": PowerSpec(14.0, 3.0)},
+    base_w=10.0,
+)
+
+EXYNOS = Platform(
+    name="exynos",
+    n_big=4, n_little=4,
+    lam_big=30.0, lam_little=12.0,
+    accel=AccelCurve(peak=22.5, c_occ=2048, knee=2048, floor=0.9),
+    G_opt=2048,
+    bulk_frac={"3+1": 0.2, "4+1": 0.2, "7+1": 0.2, "8+1": 0.2},
+    t_kl_ms=3.6, t_hd_ms=2.7, t_dh_ms=1.6,
+    os_policy="fair", td_wait_ms=0.05, td_wait_fair_ms=1.5,
+    power={"big": PowerSpec(1.6, 0.0125), "little": PowerSpec(0.15, 0.0125),
+           "accel": PowerSpec(1.5, 0.15)},
+    base_w=0.35,
+)
+
+PLATFORMS = {"ivy": IVY, "haswell": HASWELL, "exynos": EXYNOS}
+
+# Paper workload: Barnes-Hut force phase, 100k bodies.
+N_BODIES = 100_000
+TIMESTEPS_FIG2 = 75
+TIMESTEPS_FIG5 = 15

@@ -1,0 +1,149 @@
+"""The Dynamic scheduler — the paper's §3.1 two-filter pipeline as a
+thread-per-device-group runtime.
+
+Each device group gets a host (dispatcher) thread. The thread repeatedly:
+  Filter₁: asks the partitioner for a token (device pick + chunk extraction),
+           timestamped Tc1→Tc2;
+  Filter₂: hands the token to the group's executor (which fills the device
+           timestamps Tg1..Tg5), finalizes at Tc3, and feeds the throughput
+           tracker and overhead ledger.
+
+Fault tolerance: a ChunkFailure re-queues the in-flight chunk and removes the
+group; remaining groups absorb the work (work conservation is property-
+tested). Elasticity: add_group() mid-run spawns a new dispatcher thread.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.core.dispatch import ChunkExecutor, ChunkFailure, clock
+from repro.core.overheads import OverheadLedger
+from repro.core.partitioner import HeterogeneousPartitioner
+from repro.core.throughput import ThroughputTracker
+from repro.core.types import ChunkRecord, GroupSpec, IterationSpace
+
+
+@dataclass
+class ScheduleResult:
+    total_time: float
+    iterations: int
+    records: List[ChunkRecord]
+    overheads: Dict[str, Dict[str, float]]
+    throughput: Dict[str, float]
+    per_group_items: Dict[str, int]
+    failed_groups: List[str] = field(default_factory=list)
+
+    def busy_seconds(self) -> Dict[str, float]:
+        busy: Dict[str, float] = {}
+        for r in self.records:
+            busy[r.token.group] = busy.get(r.token.group, 0.0) \
+                + max(r.device_time, 0.0)
+        return busy
+
+
+class DynamicScheduler:
+    def __init__(self, groups: Dict[str, GroupSpec],
+                 executors: Dict[str, ChunkExecutor],
+                 alpha: float = 1.0, base_quantum: int = 256):
+        assert set(groups) == set(executors)
+        self.specs = dict(groups)
+        self.executors = dict(executors)
+        self.alpha = alpha
+        self.base_quantum = base_quantum
+        self.tracker = ThroughputTracker(alpha)
+        self.ledger = OverheadLedger()
+        self._threads: Dict[str, threading.Thread] = {}
+        self._records: List[ChunkRecord] = []
+        self._rec_lock = threading.Lock()
+        self._failed: List[str] = []
+        self.partitioner: Optional[HeterogeneousPartitioner] = None
+
+    # ------------------------------------------------------------------
+    def _worker(self, name: str):
+        ex = self.executors[name]
+        part = self.partitioner
+        try:
+            ex.on_worker_start()
+        except Exception:
+            pass
+        try:
+            while True:
+                tc1 = clock()
+                token = part.next_token(name)
+                tc2 = clock()
+                if token is None:
+                    break
+                rec = ChunkRecord(token, tc1=tc1, tc2=tc2)
+                try:
+                    done = ex.execute(token, rec)
+                except ChunkFailure:
+                    part.requeue(token.chunk)
+                    part.remove_group(name)
+                    with self._rec_lock:
+                        self._failed.append(name)
+                    return
+                self._finalize(done)
+            self._finalize(ex.drain())
+        except Exception:
+            # unexpected executor error: fail the group, requeue nothing more
+            part.remove_group(name)
+            with self._rec_lock:
+                self._failed.append(name)
+            raise
+
+    def _finalize(self, recs: List[ChunkRecord]):
+        t = clock()
+        for rec in recs:
+            rec.tc3 = t if rec.tc3 == 0.0 else rec.tc3
+            self.tracker.update(rec)
+            self.ledger.add(rec)
+            with self._rec_lock:
+                self._records.append(rec)
+
+    # ------------------------------------------------------------------
+    def add_group(self, spec: GroupSpec, executor: ChunkExecutor):
+        """Elastic scale-up during run()."""
+        self.specs[spec.name] = spec
+        self.executors[spec.name] = executor
+        if self.partitioner is not None:
+            self.partitioner.add_group(spec)
+            th = threading.Thread(target=self._worker, args=(spec.name,),
+                                  name=f"dispatch-{spec.name}", daemon=True)
+            self._threads[spec.name] = th
+            th.start()
+
+    def run(self, begin: int, end: int) -> ScheduleResult:
+        space = IterationSpace(begin, end)
+        self.partitioner = HeterogeneousPartitioner(
+            space, self.specs, self.tracker, self.base_quantum)
+        t0 = clock()
+        for name in list(self.specs):
+            th = threading.Thread(target=self._worker, args=(name,),
+                                  name=f"dispatch-{name}", daemon=True)
+            self._threads[name] = th
+            th.start()
+        while True:
+            alive = [t for t in list(self._threads.values()) if t.is_alive()]
+            if not alive:
+                break
+            alive[0].join(timeout=0.05)
+        total = clock() - t0
+        per_items: Dict[str, int] = {}
+        for r in self._records:
+            per_items[r.token.group] = per_items.get(r.token.group, 0) \
+                + r.token.chunk.size
+        overheads = {g: self.ledger.report(total, g)
+                     for g in self.ledger.groups()}
+        overheads["all"] = self.ledger.report(total)
+        return ScheduleResult(
+            total_time=total,
+            iterations=sum(per_items.values()),
+            records=list(self._records),
+            overheads=overheads,
+            throughput=self.tracker.snapshot(),
+            per_group_items=per_items,
+            failed_groups=list(self._failed),
+        )

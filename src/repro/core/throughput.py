@@ -1,0 +1,72 @@
+"""Per-group effective-throughput tracking — the paper's eqs (1)–(2).
+
+λ_G(tG_i) = G / T(tG_i),  λ_C(tC_i) = C(tC_i) / T(tC_i)
+
+The paper uses the previous interval's throughput directly (eq. 3/4). At
+fleet scale single-interval estimates are noisy and a slowing group must be
+detected quickly (straggler mitigation), so we keep an EWMA with the raw
+last-interval value available; ``alpha=1.0`` reproduces the paper exactly.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+from repro.core.types import ChunkRecord
+
+
+@dataclass
+class GroupStats:
+    ewma: float = 0.0
+    last: float = 0.0
+    n: int = 0
+    total_items: int = 0
+    total_time: float = 0.0
+
+    @property
+    def lifetime(self) -> float:
+        return self.total_items / self.total_time if self.total_time else 0.0
+
+
+class ThroughputTracker:
+    def __init__(self, alpha: float = 1.0):
+        """alpha=1.0 -> paper-faithful (previous interval only)."""
+        assert 0.0 < alpha <= 1.0
+        self.alpha = alpha
+        self._stats: Dict[str, GroupStats] = {}
+        self._seed: Dict[str, float] = {}
+        self._lock = threading.Lock()
+
+    def seed(self, group: str, lam: float) -> None:
+        with self._lock:
+            self._seed[group] = lam
+
+    def update(self, rec: ChunkRecord) -> float:
+        lam = rec.throughput
+        with self._lock:
+            st = self._stats.setdefault(rec.token.group, GroupStats())
+            st.last = lam
+            st.ewma = lam if st.n == 0 else \
+                self.alpha * lam + (1 - self.alpha) * st.ewma
+            st.n += 1
+            st.total_items += rec.token.chunk.size
+            st.total_time += max(rec.device_time, 1e-12)
+            return st.ewma
+
+    def get(self, group: str) -> float:
+        with self._lock:
+            st = self._stats.get(group)
+            if st and st.n:
+                return st.ewma
+            return self._seed.get(group, 1.0)
+
+    def stats(self, group: str) -> Optional[GroupStats]:
+        with self._lock:
+            return self._stats.get(group)
+
+    def snapshot(self) -> Dict[str, float]:
+        with self._lock:
+            out = dict(self._seed)
+            out.update({g: s.ewma for g, s in self._stats.items() if s.n})
+            return out

@@ -1,0 +1,4 @@
+from repro.data.pipeline import (DataConfig, Prefetcher, SyntheticLMData,
+                                 for_model)
+
+__all__ = ["DataConfig", "Prefetcher", "SyntheticLMData", "for_model"]

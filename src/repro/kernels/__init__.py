@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the perf-critical compute hot-spots.
+
+Each kernel ships with a jit'd model-layout wrapper (ops.py) and a pure-jnp
+oracle (ref.py); tests sweep shapes/dtypes in interpret mode on CPU. The
+pure-JAX chunked implementations in repro.models are algorithmically
+identical (same online-softmax / SSD blocking), so the dry-run lowering path
+is representative of the kernelized system.
+"""
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_decode import flash_decode
+from repro.kernels.ssd_scan import ssd_scan_kernel
+
+__all__ = ["flash_attention", "flash_decode", "ssd_scan_kernel"]

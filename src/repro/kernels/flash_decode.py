@@ -1,0 +1,98 @@
+"""Flash-decode Pallas TPU kernel: one query position against a long
+(possibly padded) KV cache, KV-chunked with online-softmax merge.
+
+Layout: q (B·H, D); k/v (B·KVH, S, D); kv_len (B,) valid lengths.
+Grid = (B·H, S/bk) with the cache dimension innermost-sequential; partial
+(m, l, acc) state lives in VMEM scratch. On a sequence-sharded cache the
+shard-local partials are merged by the caller (log-sum-exp merge) — the same
+math GSPMD inserts for the pure-JAX decode path.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, bk: int, nk: int, n_heads: int):
+    i = pl.program_id(0)
+    kj = pl.program_id(1)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    kv_len = len_ref[i // n_heads]
+
+    @pl.when(kj * bk < kv_len)
+    def _block():
+        q = q_ref[0]                              # (1, d)
+        k = k_ref[0]                              # (bk, d)
+        v = v_ref[0]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (1, bk)
+        cols = kj * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+        s = jnp.where(cols < kv_len, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(kj == nk - 1)
+    def _flush():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-37)).astype(o_ref.dtype)
+
+
+def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
+                 kv_len: jax.Array, *, block_k: int = 512,
+                 n_heads: int, n_kv_heads: int,
+                 interpret: bool = False) -> jax.Array:
+    """q: (B·H, D); k, v: (B·KVH, S, D); kv_len: (B,) int32 -> (B·H, D)."""
+    BH, d = q.shape
+    BKV, S, _ = k.shape
+    group = n_heads // n_kv_heads
+    bk = min(block_k, S)
+    assert S % bk == 0
+    nk = S // bk
+    scale = 1.0 / math.sqrt(d)
+
+    def kv_head(i):
+        return (i // n_heads) * n_kv_heads + (i % n_heads) // group
+
+    kernel = functools.partial(_kernel, scale=scale, bk=bk, nk=nk,
+                               n_heads=n_heads)
+    out = pl.pallas_call(
+        kernel,
+        grid=(BH, nk),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),       # kv_len (prefetchable)
+            pl.BlockSpec((1, 1, d), lambda i, kk: (i, 0, 0)),
+            pl.BlockSpec((1, bk, d), lambda i, kk: (kv_head(i), kk, 0)),
+            pl.BlockSpec((1, bk, d), lambda i, kk: (kv_head(i), kk, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda i, kk: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, 1, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(kv_len.astype(jnp.int32), q[:, None, :], k, v)
+    return out[:, 0, :]

@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal=True, n_heads=None,
+                        n_kv_heads=None):
+    """q: (B·H, Sq, D); k, v: (B·KVH, Skv, D)."""
+    BH, sq, d = q.shape
+    BKV, skv, _ = k.shape
+    group = n_heads // n_kv_heads
+    b = BH // n_heads
+    qh = q.reshape(b, n_heads, sq, d)
+    kh = jnp.repeat(k.reshape(b, n_kv_heads, skv, d), group, axis=1)
+    vh = jnp.repeat(v.reshape(b, n_kv_heads, skv, d), group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", qh, kh,
+                   preferred_element_type=jnp.float32) / math.sqrt(d)
+    if causal:
+        mask = jnp.tril(jnp.ones((sq, skv), bool), k=skv - sq)
+        s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), vh,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(BH, sq, d).astype(q.dtype)
+
+
+def flash_decode_ref(q, k, v, kv_len, *, n_heads=None, n_kv_heads=None):
+    """q: (B·H, D); k, v: (B·KVH, S, D); kv_len: (B,)."""
+    BH, d = q.shape
+    b = BH // n_heads
+    group = n_heads // n_kv_heads
+    S = k.shape[1]
+    qh = q.reshape(b, n_heads, d)
+    kh = jnp.repeat(k.reshape(b, n_kv_heads, S, d), group, axis=1)
+    vh = jnp.repeat(v.reshape(b, n_kv_heads, S, d), group, axis=1)
+    s = jnp.einsum("bhd,bhkd->bhk", qh, kh,
+                   preferred_element_type=jnp.float32) / math.sqrt(d)
+    mask = jnp.arange(S)[None, None, :] < kv_len[:, None, None]
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhk,bhkd->bhd", p.astype(v.dtype), vh,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(BH, d).astype(q.dtype)
+
+
+def ssd_scan_ref(x, dt, A, B, C, chunk: int = 128):
+    """Sequential-recurrence oracle. x: (BH, S, P); dt: (BH, S); A: (BH,);
+    B, C: (BH, S, N). Returns (BH, S, P)."""
+    BH, S, P = x.shape
+    N = B.shape[-1]
+
+    def per_head(xh, dth, a, bh, ch):
+        def step(s, inp):
+            xt, dtt, bt, ct = inp
+            da = jnp.exp(dtt * a)
+            s = s * da + dtt * jnp.outer(bt, xt)          # (N, P)
+            y = ct @ s                                    # (P,)
+            return s, y
+
+        s0 = jnp.zeros((N, P), jnp.float32)
+        _, ys = jax.lax.scan(step, s0, (xh.astype(jnp.float32),
+                                        dth.astype(jnp.float32),
+                                        bh.astype(jnp.float32),
+                                        ch.astype(jnp.float32)))
+        return ys
+
+    ys = jax.vmap(per_head)(x, dt, A, B, C)
+    return ys.astype(x.dtype)

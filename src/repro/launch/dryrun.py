@@ -1,0 +1,210 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input-shape × mesh)
+cell against the production mesh, with NO device allocation (ShapeDtypeStruct
+stand-ins), and record memory/cost/collective evidence for EXPERIMENTS.md.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both --skip-existing
+"""
+import argparse
+import gzip
+import json
+import re
+import time
+import traceback
+from collections import Counter
+from pathlib import Path
+
+import jax
+
+from repro.configs.base import SHAPES_BY_NAME, shape_applicable
+from repro.configs.registry import ARCHS, dryrun_cells, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as M
+from repro.sharding.partition import use_mesh_rules
+from repro.sharding.rules import ShardingRules
+from repro.train.optimizer import OptConfig, abstract_opt_state, \
+    opt_state_axes
+from repro.train.train_step import train_step
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+COLLECTIVE_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)")
+
+
+def build_cell(cfg, shape, oc: OptConfig):
+    """Returns (step_fn, abstract_args, logical_axes_trees)."""
+    specs = M.input_specs(cfg, shape)
+    in_axes = M.input_axes(cfg, shape)
+    if shape.kind == "train":
+        p_abs = M.abstract_params(cfg)
+        o_abs = abstract_opt_state(p_abs)
+
+        def step(params, opt, batch):
+            return train_step(cfg, oc, params, opt, batch)
+
+        return step, (p_abs, o_abs, specs), \
+            (M.param_axes(cfg), opt_state_axes(M.param_axes(cfg)), in_axes)
+    if shape.kind == "prefill":
+        p_abs = M.abstract_params(cfg)
+
+        def step(params, batch):
+            return M.prefill(cfg, params, batch["tokens"],
+                             batch.get("prefix_emb"))
+
+        return step, (p_abs, specs), (M.param_axes(cfg), in_axes)
+    # decode / long_decode
+    p_abs = M.abstract_params(cfg)
+
+    def step(params, batch):
+        return M.decode_step(cfg, params, batch["cache"], batch["tokens"])
+
+    return step, (p_abs, specs), (M.param_axes(cfg), in_axes)
+
+
+def shardings_for(mesh, rules, abstract_args, axes_trees):
+    from repro.models.layers import ParamDef
+
+    def is_axes_leaf(x):
+        return isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x)
+
+    def one(sds, axes):
+        return rules.sharding(mesh, axes, sds.shape)
+
+    out = []
+    for abs_tree, ax_tree in zip(abstract_args, axes_trees):
+        out.append(jax.tree.map(one, abs_tree, ax_tree,
+                                is_leaf=lambda x: False))
+    return tuple(out)
+
+
+def summarize_collectives(hlo_text: str):
+    ops = Counter()
+    for m in COLLECTIVE_RE.finditer(hlo_text):
+        ops[m.group(1)] += 1
+    return dict(ops)
+
+
+def run_cell(arch_id: str, shape_name: str, mesh_kind: str,
+             block_skip: bool = False, save_hlo: bool = True,
+             overrides=None, uneven_heads: bool = False) -> dict:
+    cfg = get_config(arch_id)
+    if block_skip:
+        cfg = cfg.replace(causal_block_skip=True)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    shape = SHAPES_BY_NAME[shape_name]
+    ok, reason = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch_id, "shape": shape_name, "mesh": mesh_kind,
+                "status": "skipped", "reason": reason}
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    rules = ShardingRules().for_shape_kind(shape.kind)
+    if uneven_heads:
+        rules = rules.with_uneven("heads", "kv_heads", "act_heads",
+                                  "act_kv_heads")
+    oc = OptConfig()
+    res = {"arch": arch_id, "shape": shape_name, "mesh": mesh_kind,
+           "mesh_shape": list(mesh.devices.shape),
+           "block_skip": block_skip, "status": "error"}
+    t0 = time.time()
+    try:
+        step, abstract_args, axes_trees = build_cell(cfg, shape, oc)
+        in_sh = shardings_for(mesh, rules, abstract_args, axes_trees)
+        # decode: donate the cache so KV updates alias in place
+        donate = (1,) if shape.is_decode else ()
+        with use_mesh_rules(mesh, rules):
+            lowered = jax.jit(step, in_shardings=in_sh,
+                              donate_argnums=donate).lower(*abstract_args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+        res.update({
+            "status": "ok",
+            "lower_s": round(t_lower, 2),
+            "compile_s": round(t_compile, 2),
+            "memory": {
+                "argument_bytes": getattr(ma, "argument_size_in_bytes", None),
+                "output_bytes": getattr(ma, "output_size_in_bytes", None),
+                "temp_bytes": getattr(ma, "temp_size_in_bytes", None),
+                "alias_bytes": getattr(ma, "alias_size_in_bytes", None),
+            },
+            "cost_analysis": {
+                "flops_per_device_loopbody": ca.get("flops"),
+                "bytes_accessed_loopbody": ca.get("bytes accessed"),
+            },
+            "collective_op_counts": summarize_collectives(hlo),
+            "n_devices": mesh.devices.size,
+        })
+        if save_hlo:
+            out = cell_path(arch_id, shape_name, mesh_kind, block_skip,
+                            overrides)
+            out.parent.mkdir(parents=True, exist_ok=True)
+            with gzip.open(str(out) + ".hlo.gz", "wt") as f:
+                f.write(hlo)
+    except Exception as e:  # noqa: BLE001 — record the failure, keep matrix running
+        res["error"] = f"{type(e).__name__}: {e}"
+        res["traceback"] = traceback.format_exc(limit=10)
+    res["total_s"] = round(time.time() - t0, 2)
+    return res
+
+
+def cell_path(arch, shape, mesh_kind, block_skip=False, overrides=None) -> Path:
+    sfx = "__bs" if block_skip else ""
+    if overrides:
+        sfx += "__" + "_".join(f"{k}-{v}" for k, v in sorted(overrides.items()))
+    return RESULTS_DIR / mesh_kind / f"{arch}__{shape}{sfx}.json"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--block-skip", action="store_true",
+                    help="triangular causal schedule (perf variant)")
+    ap.add_argument("--no-hlo", action="store_true")
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        cells = [(c.arch_id, s.name) for c, s, ok, _ in dryrun_cells()
+                 if ok]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    n_ok = n_fail = 0
+    for mesh_kind in meshes:
+        for arch, shape in cells:
+            path = cell_path(arch, shape, mesh_kind, args.block_skip)
+            if args.skip_existing and path.exists():
+                print(f"[skip] {mesh_kind} {arch} {shape}")
+                continue
+            res = run_cell(arch, shape, mesh_kind, args.block_skip,
+                           save_hlo=not args.no_hlo)
+            path.parent.mkdir(parents=True, exist_ok=True)
+            path.write_text(json.dumps(res, indent=2))
+            tag = res["status"].upper()
+            n_ok += res["status"] == "ok"
+            n_fail += res["status"] == "error"
+            print(f"[{tag}] {mesh_kind} {arch} {shape} "
+                  f"({res.get('total_s')}s) "
+                  f"{res.get('error', '')}", flush=True)
+    print(f"done: {n_ok} ok, {n_fail} failed")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

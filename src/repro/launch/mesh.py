@@ -1,0 +1,53 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state — smoke tests must keep seeing 1 CPU device.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import AxisType, Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_mesh_from(devices: Sequence, shape: Tuple[int, ...],
+                   axes: Tuple[str, ...]) -> Mesh:
+    """Mesh over an explicit device subset (heterogeneous device groups)."""
+    arr = np.asarray(devices).reshape(shape)
+    return Mesh(arr, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_group_meshes(group_sizes: Sequence[int],
+                      model_axis: int = 1) -> list:
+    """Split jax.devices() into disjoint submeshes — the big.LITTLE analogue.
+
+    Each group becomes a (data, model) mesh over ``group_sizes[i]`` devices.
+    Used by the hetero scheduler: one device group per paper-"device".
+    """
+    devs = jax.devices()
+    assert sum(group_sizes) <= len(devs), (group_sizes, len(devs))
+    meshes, off = [], 0
+    for n in group_sizes:
+        sub = devs[off:off + n]
+        off += n
+        data = n // model_axis
+        meshes.append(make_mesh_from(sub, (data, model_axis),
+                                     ("data", "model")))
+    return meshes
+
+
+# TPU v5e hardware constants (per chip) — roofline denominators.
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # B/s
+ICI_BW = 50e9                   # B/s per link (~per-device effective)
+CHIP_ACTIVE_W = 200.0           # W, busy (roofline-power envelope)
+CHIP_IDLE_W = 75.0              # W, idle

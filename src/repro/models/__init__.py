@@ -1,0 +1,8 @@
+from repro.models.model import (param_defs, init_params, abstract_params,
+                                param_axes, forward, prefill, decode_step,
+                                init_cache, cache_axes, input_specs,
+                                input_axes, text_len)
+
+__all__ = ["param_defs", "init_params", "abstract_params", "param_axes",
+           "forward", "prefill", "decode_step", "init_cache", "cache_axes",
+           "input_specs", "input_axes", "text_len"]

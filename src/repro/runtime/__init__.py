@@ -1,0 +1,6 @@
+from repro.runtime.straggler import StragglerDetector, StragglerReport
+from repro.runtime.fault_tolerance import Watchdog, GroupHealth
+from repro.runtime.elastic import ElasticController
+
+__all__ = ["StragglerDetector", "StragglerReport", "Watchdog", "GroupHealth",
+           "ElasticController"]

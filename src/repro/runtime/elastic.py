@@ -1,0 +1,42 @@
+"""Elastic scaling: device groups join/leave a running schedule.
+
+Join: DynamicScheduler.add_group spawns a dispatcher thread; the partitioner
+seeds the newcomer's λ and eq. (4) immediately sizes its chunks — no global
+pause, no re-partitioning of in-flight work. Leave: remove_group (drain) or
+ChunkFailure (abrupt, chunk requeued). This module is the small policy layer:
+it owns GroupSpec construction and the λ seeding choice for newcomers
+(median of current same-kind groups, so a new BIG node doesn't start with a
+wildly wrong chunk size).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+from repro.core.dispatch import ChunkExecutor
+from repro.core.scheduler import DynamicScheduler
+from repro.core.types import DeviceKind, GroupSpec
+
+
+class ElasticController:
+    def __init__(self, scheduler: DynamicScheduler):
+        self.scheduler = scheduler
+
+    def _seed_lambda(self, kind: DeviceKind) -> Optional[float]:
+        peers = [g for g in self.scheduler.specs.values() if g.kind == kind]
+        lams = sorted(self.scheduler.tracker.get(g.name) for g in peers)
+        if not lams:
+            return None
+        return lams[len(lams) // 2]
+
+    def join(self, name: str, kind: DeviceKind, executor: ChunkExecutor,
+             fixed_chunk: Optional[int] = None,
+             min_chunk: int = 1) -> GroupSpec:
+        lam = self._seed_lambda(kind) or 1.0
+        spec = GroupSpec(name, kind, fixed_chunk=fixed_chunk,
+                         min_chunk=min_chunk, init_throughput=lam)
+        self.scheduler.add_group(spec, executor)
+        return spec
+
+    def leave(self, name: str):
+        if self.scheduler.partitioner is not None:
+            self.scheduler.partitioner.remove_group(name)

@@ -1,0 +1,48 @@
+"""Straggler detection & mitigation.
+
+Mitigation is *native* to the paper's partitioner: a slowing group's λ-EWMA
+drops, so eq. (4) automatically hands it smaller chunks — it starves itself
+of work instead of stalling the fleet. This module adds detection/reporting
+on top (for operators and for quarantine decisions), normalizing each group's
+current λ by its own healthy baseline so heterogeneity (a LITTLE group being
+slower than a BIG group) is not misread as straggling.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.core.throughput import ThroughputTracker
+
+
+@dataclass
+class StragglerReport:
+    group: str
+    current: float
+    baseline: float
+
+    @property
+    def slowdown(self) -> float:
+        return self.current / self.baseline if self.baseline else 1.0
+
+
+class StragglerDetector:
+    def __init__(self, tracker: ThroughputTracker,
+                 threshold: float = 0.5, warmup_chunks: int = 3):
+        self.tracker = tracker
+        self.threshold = threshold
+        self.warmup = warmup_chunks
+        self._baseline: Dict[str, float] = {}
+
+    def observe(self) -> List[StragglerReport]:
+        out = []
+        for g, lam in self.tracker.snapshot().items():
+            st = self.tracker.stats(g)
+            if st is None or st.n < self.warmup:
+                continue
+            base = self._baseline.get(g)
+            if base is None or lam > base:
+                self._baseline[g] = base = lam
+            if lam < self.threshold * base:
+                out.append(StragglerReport(g, lam, base))
+        return out

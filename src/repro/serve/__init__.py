@@ -1,0 +1,3 @@
+from repro.serve.engine import HeteroServeEngine, ServeReport
+
+__all__ = ["HeteroServeEngine", "ServeReport"]

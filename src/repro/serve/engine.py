@@ -1,0 +1,135 @@
+"""HeteroServeEngine: the paper's scheduler applied to batched inference.
+
+The iteration space is the request queue; a chunk is a batch of requests. The
+accelerator group's tuned chunk G is the throughput-optimal serving batch
+(found with the same §3.2 search — too small under-fills the MXU, too large
+blows the KV-cache working set); other groups get λ-proportional batches.
+Each chunk is prefill + a fixed decode burst; effective throughput is
+generated tokens / wall time, which feeds eq. (4) exactly like training.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import LMConfig
+from repro.core import (ChunkRecord, DeviceKind, DynamicScheduler, GroupSpec,
+                        JaxChunkExecutor)
+from repro.models import model as M
+from repro.train.trainer import GroupDef, bucket
+
+
+@dataclass
+class ServeReport:
+    requests: int
+    new_tokens: int
+    time_s: float
+    per_group_items: Dict[str, int]
+    overheads: Dict[str, Dict[str, float]]
+    throughput: Dict[str, float]
+
+
+class HeteroServeEngine:
+    def __init__(self, cfg: LMConfig, groups: List[GroupDef],
+                 prompt_len: int = 32, decode_tokens: int = 8,
+                 max_len: Optional[int] = None, seed: int = 0,
+                 alpha: float = 0.5):
+        self.cfg = cfg
+        self.groups = groups
+        self.prompt_len = prompt_len
+        self.decode_tokens = decode_tokens
+        self.max_len = max_len or bucket(prompt_len + decode_tokens)
+        self.seed = seed
+        self.alpha = alpha
+        self.params = M.init_params(cfg, jax.random.PRNGKey(seed))
+        self._fns: Dict[int, tuple] = {}
+
+    # ------------------------------------------------------------------
+    def _fns_for(self, b: int):
+        if b in self._fns:
+            return self._fns[b]
+        cfg = self.cfg
+
+        @jax.jit
+        def prefill_fn(params, tokens, prefix):
+            return M.prefill(cfg, params, tokens, prefix,
+                             max_len=self.max_len)
+
+        @jax.jit
+        def decode_fn(params, cache, tokens):
+            return M.decode_step(cfg, params, cache, tokens)
+
+        self._fns[b] = (prefill_fn, decode_fn)
+        return self._fns[b]
+
+    def _prompt(self, idx: int, rng_salt: int = 0) -> np.ndarray:
+        rng = np.random.Generator(np.random.PCG64(
+            (self.seed << 32) ^ (idx + rng_salt)))
+        return rng.integers(0, self.cfg.vocab, self.prompt_len,
+                            dtype=np.int32)
+
+    def _make_executor(self, g: GroupDef):
+        cfg = self.cfg
+
+        def make_inputs(token):
+            c = token.chunk
+            pad = bucket(c.size)
+            toks = np.stack([self._prompt(i) for i in range(c.begin, c.end)])
+            if pad > c.size:
+                toks = np.concatenate(
+                    [toks, np.zeros((pad - c.size, self.prompt_len),
+                                    np.int32)])
+            out = {"tokens": toks}
+            if cfg.prefix_len:
+                rngp = np.random.Generator(np.random.PCG64(c.begin))
+                out["prefix_emb"] = rngp.standard_normal(
+                    (pad, cfg.prefix_len, cfg.d_model)).astype(np.float32) \
+                    * 0.02
+            return out
+
+        def step(batch):
+            b = batch["tokens"].shape[0]
+            prefill_fn, decode_fn = self._fns_for(b)
+            if g.slowdown > 1.0:
+                time.sleep((g.slowdown - 1.0) * 0.001 * b)
+            logits, cache = prefill_fn(self.params, batch["tokens"],
+                                       batch.get("prefix_emb"))
+            tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+            toks = [tok]
+            for _ in range(self.decode_tokens - 1):
+                logits, cache = decode_fn(self.params, cache, tok)
+                tok = jnp.argmax(logits[:, -1], -1)[:, None] \
+                    .astype(jnp.int32)
+                toks.append(tok)
+            return jnp.concatenate(toks, axis=1)
+
+        def fetch(outs):
+            return {"tokens_out": np.asarray(outs)}
+
+        return JaxChunkExecutor(step, make_inputs, fetch, device=g.device,
+                                async_depth=g.async_depth,
+                                priority_boost=g.priority_boost)
+
+    # ------------------------------------------------------------------
+    def serve(self, n_requests: int) -> ServeReport:
+        specs, execs = {}, {}
+        for g in self.groups:
+            specs[g.name] = GroupSpec(g.name, g.kind,
+                                      fixed_chunk=g.fixed_chunk,
+                                      min_chunk=1, max_chunk=n_requests,
+                                      init_throughput=1.0)
+            execs[g.name] = self._make_executor(g)
+        sched = DynamicScheduler(specs, execs, alpha=self.alpha)
+        res = sched.run(0, n_requests)
+        return ServeReport(
+            requests=res.iterations,
+            new_tokens=res.iterations * self.decode_tokens,
+            time_s=res.total_time,
+            per_group_items=res.per_group_items,
+            overheads=res.overheads,
+            throughput=res.throughput)

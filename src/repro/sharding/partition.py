@@ -1,0 +1,55 @@
+"""Activation sharding-constraint helpers.
+
+Model code calls :func:`lshard` with *logical* axis names. When a mesh context
+is active (set by the launchers via :func:`use_mesh_rules`), this lowers to
+``jax.lax.with_sharding_constraint``; otherwise it is a no-op so the same model
+code runs un-meshed in unit tests.
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh
+
+from repro.sharding.rules import ShardingRules
+
+_state = threading.local()
+
+
+def _ctx():
+    return getattr(_state, "ctx", None)
+
+
+@contextmanager
+def use_mesh_rules(mesh: Mesh, rules: Optional[ShardingRules] = None):
+    prev = _ctx()
+    _state.ctx = (mesh, rules or ShardingRules())
+    try:
+        with mesh:
+            yield
+    finally:
+        _state.ctx = prev
+
+
+def active_mesh() -> Optional[Mesh]:
+    c = _ctx()
+    return c[0] if c else None
+
+
+def active_rules() -> Optional[ShardingRules]:
+    c = _ctx()
+    return c[1] if c else None
+
+
+def lshard(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """Constrain ``x`` to the sharding implied by logical ``axes`` (or no-op)."""
+    c = _ctx()
+    if c is None:
+        return x
+    mesh, rules = c
+    spec = rules.spec(mesh, axes, x.shape)
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(mesh, spec))

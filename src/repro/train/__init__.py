@@ -1,0 +1,11 @@
+from repro.train.loss import cross_entropy
+from repro.train.optimizer import (OptConfig, init_opt_state,
+                                   abstract_opt_state, opt_state_axes,
+                                   adamw_update, lr_at, global_norm)
+from repro.train.train_step import train_step, grad_step, loss_fn, \
+    make_train_step
+
+__all__ = ["cross_entropy", "OptConfig", "init_opt_state",
+           "abstract_opt_state", "opt_state_axes", "adamw_update", "lr_at",
+           "global_norm", "train_step", "grad_step", "loss_fn",
+           "make_train_step"]

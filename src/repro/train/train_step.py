@@ -1,0 +1,48 @@
+"""The pjit'd training step (loss + grad + AdamW update, remat'd layers)."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig
+from repro.models import model as M
+from repro.train.loss import chunked_cross_entropy, cross_entropy
+from repro.train.optimizer import OptConfig, adamw_update
+
+
+def loss_fn(cfg: LMConfig, params, batch: Dict) -> Tuple[jax.Array, Dict]:
+    hidden, aux = M.forward(cfg, params, batch["tokens"],
+                            batch.get("prefix_emb"), remat=True,
+                            return_hidden=True)
+    # loss on text positions only (modality prefixes carry no labels)
+    if cfg.prefix_len:
+        hidden = hidden[:, cfg.prefix_len:, :]
+    loss, metrics = chunked_cross_entropy(
+        hidden, M.unembed_weight(cfg, params), batch["labels"],
+        batch.get("loss_mask"))
+    metrics["aux_loss"] = aux
+    return loss + aux, metrics
+
+
+def train_step(cfg: LMConfig, oc: OptConfig, params, opt, batch):
+    """One optimizer step. Returns (params', opt', metrics)."""
+    (_, metrics), grads = jax.value_and_grad(
+        lambda p: loss_fn(cfg, p, batch), has_aux=True)(params)
+    params, opt, opt_metrics = adamw_update(oc, params, grads, opt)
+    metrics.update(opt_metrics)
+    return params, opt, metrics
+
+
+def grad_step(cfg: LMConfig, params, batch):
+    """Gradient-only step (used by the hetero trainer: groups compute grads
+    on their chunks; the combine is example-count-weighted)."""
+    (_, metrics), grads = jax.value_and_grad(
+        lambda p: loss_fn(cfg, p, batch), has_aux=True)(params)
+    return grads, metrics
+
+
+def make_train_step(cfg: LMConfig, oc: OptConfig):
+    return partial(train_step, cfg, oc)

@@ -1,0 +1,198 @@
+"""HeteroTrainer: the paper's Dynamic scheduler driving real JAX training.
+
+Each optimizer step's global batch is the *iteration space* (sample indices);
+device groups receive λ-proportional chunks of samples (the accelerator group
+its tuned chunk G), compute gradients on them, and the trainer combines
+gradients example-count-weighted before one AdamW update. This is synchronous
+data parallelism with dynamic, heterogeneity-aware load balancing — stragglers
+automatically receive smaller chunks; a failed group's chunk is re-queued.
+
+Chunk sizes are bucketed to powers of two so the jit cache stays small (the
+O_kl mitigation: no recompilation storms); padded rows carry loss_mask=0 and
+do not bias the gradient (the combine weights use *real* example counts).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import LMConfig
+from repro.core import (ChunkRecord, DeviceKind, DynamicScheduler,
+                        EnergyModel, GroupSpec, JaxChunkExecutor, PowerSpec)
+from repro.core.chunk_search import search_chunk
+from repro.data.pipeline import SyntheticLMData, for_model
+from repro.train.optimizer import OptConfig, adamw_update, init_opt_state
+from repro.train.train_step import grad_step
+
+
+def bucket(n: int) -> int:
+    b = 1
+    while b < n:
+        b *= 2
+    return b
+
+
+@dataclass
+class GroupDef:
+    name: str
+    kind: DeviceKind
+    device: object = None          # jax device (or None = default)
+    fixed_chunk: Optional[int] = None
+    async_depth: int = 1
+    priority_boost: bool = False
+    slowdown: float = 1.0          # artificial slowdown for straggler tests
+    fail_after_chunks: Optional[int] = None   # fault injection
+
+
+@dataclass
+class StepReport:
+    step: int
+    loss: float
+    examples: int
+    time_s: float
+    per_group_items: Dict[str, int]
+    overheads: Dict[str, Dict[str, float]]
+    throughput: Dict[str, float]
+    failed_groups: List[str] = field(default_factory=list)
+
+
+class HeteroTrainer:
+    def __init__(self, cfg: LMConfig, groups: List[GroupDef],
+                 seq_len: int = 128, global_batch: int = 64,
+                 oc: Optional[OptConfig] = None, seed: int = 0,
+                 alpha: float = 0.5, repeat_data: bool = False):
+        self.repeat_data = repeat_data
+        self.cfg = cfg
+        self.groups = groups
+        self.seq_len = seq_len
+        self.global_batch = global_batch
+        self.oc = oc or OptConfig()
+        self.alpha = alpha
+        self.data = for_model(cfg, seq_len - cfg.prefix_len, seed)
+        from repro.models import model as M
+        self.params = M.init_params(cfg, jax.random.PRNGKey(seed))
+        self.opt = init_opt_state(self.params)
+        self.step_idx = 0
+        self._grad_fns: Dict[int, callable] = {}
+        self.history: List[StepReport] = []
+
+    # ------------------------------------------------------------------
+    def _grad_fn(self):
+        cfg = self.cfg
+
+        def fn(params, batch):
+            grads, metrics = grad_step(cfg, params, batch)
+            n = batch["loss_mask"][:, 0].sum()     # real examples in chunk
+            grads = jax.tree.map(lambda g: g * n, grads)
+            return grads, metrics["loss"] * n, n
+
+        return jax.jit(fn)
+
+    def _make_executor(self, g: GroupDef):
+        fn = self._grad_fn()
+        data = self.data
+        params = lambda: self.params        # late binding per step
+        slowdown = g.slowdown
+
+        def make_inputs(token):
+            # chunk bounds are absolute sample indices: any group can
+            # materialize any range, and re-executed chunks are identical
+            c = token.chunk
+            return data.batch(c.begin, c.end, pad_to=bucket(c.size))
+
+        counter = {"n": 0}
+
+        def step(batch):
+            if g.fail_after_chunks is not None:
+                counter["n"] += 1
+                if counter["n"] > g.fail_after_chunks:
+                    from repro.core.dispatch import ChunkFailure
+                    raise ChunkFailure(f"group {g.name} injected failure")
+            if slowdown > 1.0:
+                time.sleep((slowdown - 1.0) * 0.001 * batch["tokens"].shape[0])
+            return fn(self.params, batch)
+
+        def fetch(outs):
+            grads, loss_n, n = outs
+            return {"grads": grads, "loss_n": float(loss_n), "n": float(n)}
+
+        return JaxChunkExecutor(step, make_inputs, fetch, device=g.device,
+                                async_depth=g.async_depth,
+                                priority_boost=g.priority_boost)
+
+    # ------------------------------------------------------------------
+    def tune_accel_chunk(self, seed_chunk: int = 4, multiples: int = 6) -> int:
+        """§3.2 G-search over real measured throughput of the accel group."""
+        accel = [g for g in self.groups if g.kind == DeviceKind.ACCEL]
+        if not accel:
+            return seed_chunk
+        g = accel[0]
+        ex = self._make_executor(g)
+        self._space_offset = 0
+
+        def measure(c: int) -> float:
+            c = min(c, self.global_batch)
+            from repro.core.types import Chunk, Token
+            tok = Token(Chunk(0, c, 0), g.name, g.kind)
+            rec = ChunkRecord(tok)
+            t0 = time.monotonic()
+            done = ex.execute(tok, rec) + ex.drain()
+            dt = time.monotonic() - t0
+            return c / max(dt, 1e-9)
+
+        measure(min(seed_chunk, self.global_batch))   # compile warmup
+        tr = search_chunk(measure, seed_chunk, multiples=multiples,
+                          max_chunk=self.global_batch)
+        g.fixed_chunk = tr.best_chunk
+        return tr.best_chunk
+
+    # ------------------------------------------------------------------
+    def train_step(self) -> StepReport:
+        specs = {}
+        execs = {}
+        for g in self.groups:
+            specs[g.name] = GroupSpec(
+                g.name, g.kind, fixed_chunk=g.fixed_chunk,
+                min_chunk=1, max_chunk=self.global_batch,
+                init_throughput=1.0)
+            execs[g.name] = self._make_executor(g)
+        sched = DynamicScheduler(specs, execs, alpha=self.alpha)
+        self._space_offset = 0 if self.repeat_data \
+            else self.step_idx * self.global_batch
+        res = sched.run(self._space_offset,
+                        self._space_offset + self.global_batch)
+
+        # example-weighted gradient combine across groups
+        total_g = None
+        total_loss = 0.0
+        total_n = 0.0
+        for rec in res.records:
+            r = rec.meta.get("result")
+            if not r:
+                continue
+            total_loss += r["loss_n"]
+            total_n += r["n"]
+            g = r["grads"]
+            total_g = g if total_g is None else \
+                jax.tree.map(jnp.add, total_g, g)
+        assert total_n > 0, "no gradients collected"
+        total_g = jax.tree.map(lambda x: x / total_n, total_g)
+        self.params, self.opt, _ = adamw_update(
+            self.oc, self.params, total_g, self.opt)
+        self.step_idx += 1
+        rep = StepReport(
+            step=self.step_idx, loss=total_loss / total_n,
+            examples=int(total_n), time_s=res.total_time,
+            per_group_items=res.per_group_items,
+            overheads=res.overheads, throughput=res.throughput,
+            failed_groups=res.failed_groups)
+        self.history.append(rep)
+        return rep
+
+    def train(self, steps: int) -> List[StepReport]:
+        return [self.train_step() for _ in range(steps)]

@@ -1,0 +1,7 @@
+import os
+import sys
+
+# NOTE: never set XLA_FLAGS / host device count here — smoke tests and
+# benches must see the single real CPU device (the 512-device trick is
+# exclusively the dry-run launcher's, set before any jax import there).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,45 @@
+"""Unit tests: §3.2 accelerator chunk-size search."""
+import pytest
+
+from repro.core import occupancy_seed, search_chunk
+
+
+def curve(peak_at, peak=100.0):
+    def f(c):
+        occ = min(1.0, c / peak_at)
+        pen = 1.0 if c <= peak_at else 1.0 / (1 + 0.5 * (c / peak_at - 1))
+        return peak * occ * pen
+    return f
+
+
+def test_occupancy_seed_matches_paper_example():
+    # Haswell iGPU: 20 EUs × SIMD-16 = 320 (paper §3.2)
+    assert occupancy_seed(20, 16) == 320
+
+
+def test_search_finds_peak_on_multiple():
+    tr = search_chunk(curve(1280), seed=320)
+    assert tr.best_chunk == 1280
+
+
+def test_search_stops_after_patience():
+    calls = []
+
+    def f(c):
+        calls.append(c)
+        return curve(640)(c)
+
+    search_chunk(f, seed=320, patience=2)
+    # 320, 640 (peak), then two non-improving -> stop at 1280
+    assert calls == [320, 640, 960, 1280]
+
+
+def test_search_monotone_curve_respects_max():
+    tr = search_chunk(lambda c: float(c), seed=100, max_chunk=1000)
+    assert tr.best_chunk == 1000
+
+
+def test_flat_curve_returns_first():
+    tr = search_chunk(lambda c: 5.0, seed=64)
+    assert tr.best_chunk == 64
+    assert len(tr.tried) == 3  # seed + patience(2)

@@ -1,0 +1,28 @@
+"""Energy model + EDP accounting."""
+import pytest
+
+from repro.core import (Chunk, ChunkRecord, DeviceKind, EnergyModel,
+                        PowerSpec, Token)
+
+
+def test_busy_idle_integration():
+    m = EnergyModel({"g": PowerSpec(active_w=100.0, idle_w=10.0)},
+                    base_w=5.0)
+    rep = m.energy(total_time_s=10.0, busy_s={"g": 4.0})
+    # 4s·100W + 6s·10W + 10s·5W = 400 + 60 + 50
+    assert rep.total_j == pytest.approx(510.0)
+    assert rep.edp == pytest.approx(5100.0)
+
+
+def test_energy_from_records():
+    m = EnergyModel({"g": PowerSpec(100.0, 0.0)})
+    r = ChunkRecord(Token(Chunk(0, 10), "g", DeviceKind.ACCEL),
+                    tg1=1.0, tg5=3.0)
+    rep = m.energy_from_records(5.0, [r])
+    assert rep.per_group_j["g"] == pytest.approx(200.0)
+
+
+def test_busy_clamped_to_total():
+    m = EnergyModel({"g": PowerSpec(100.0, 0.0)})
+    rep = m.energy(1.0, {"g": 99.0})
+    assert rep.total_j == pytest.approx(100.0)

@@ -1,0 +1,110 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracles,
+executed in interpret mode on CPU (the kernels' TPU lowering target is
+documented in each kernel header)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_decode import flash_decode
+from repro.kernels.ssd_scan import ssd_scan_kernel
+
+KEY = jax.random.PRNGKey(3)
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("b,h,kvh,s,d", [
+    (1, 4, 4, 128, 32),     # MHA
+    (2, 8, 2, 128, 64),     # GQA 4:1
+    (1, 8, 1, 256, 64),     # MQA
+    (2, 4, 2, 64, 128),     # wide head
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_sweep(b, h, kvh, s, d, dtype, causal):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b * h, s, d), dtype)
+    k = jax.random.normal(ks[1], (b * kvh, s, d), dtype)
+    v = jax.random.normal(ks[2], (b * kvh, s, d), dtype)
+    out = flash_attention(q, k, v, causal=causal, block_q=64, block_k=64,
+                          n_heads=h, n_kv_heads=kvh, interpret=True)
+    exp = ref.flash_attention_ref(q, k, v, causal=causal, n_heads=h,
+                                  n_kv_heads=kvh)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), **tol(dtype))
+
+
+@pytest.mark.parametrize("blocks", [(32, 128), (128, 32), (128, 128)])
+def test_flash_attention_block_shape_invariance(blocks):
+    bq, bk = blocks
+    q = jax.random.normal(KEY, (4, 256, 64))
+    k = jax.random.normal(KEY, (2, 256, 64))
+    v = jax.random.normal(KEY, (2, 256, 64))
+    out = flash_attention(q, k, v, causal=True, block_q=bq, block_k=bk,
+                          n_heads=2, n_kv_heads=1, interpret=True)
+    exp = ref.flash_attention_ref(q, k, v, causal=True, n_heads=2,
+                                  n_kv_heads=1)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("b,h,kvh,S,d", [
+    (2, 4, 4, 256, 32),
+    (2, 8, 2, 512, 64),
+    (1, 4, 1, 128, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_decode_sweep(b, h, kvh, S, d, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b * h, d), dtype)
+    k = jax.random.normal(ks[1], (b * kvh, S, d), dtype)
+    v = jax.random.normal(ks[2], (b * kvh, S, d), dtype)
+    kv_len = jnp.asarray(
+        np.random.default_rng(0).integers(1, S + 1, b), jnp.int32)
+    out = flash_decode(q, k, v, kv_len, block_k=64, n_heads=h,
+                       n_kv_heads=kvh, interpret=True)
+    exp = ref.flash_decode_ref(q, k, v, kv_len, n_heads=h, n_kv_heads=kvh)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), **tol(dtype))
+
+
+@pytest.mark.parametrize("BH,S,P,N,Q", [
+    (2, 128, 32, 16, 32),
+    (4, 256, 64, 64, 128),
+    (3, 96, 16, 8, 32),
+])
+def test_ssd_scan_sweep(BH, S, P, N, Q):
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (BH, S, P)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (BH, S)))
+    A = -jnp.exp(jax.random.normal(ks[2], (BH,)) * 0.3)
+    B = jax.random.normal(ks[3], (BH, S, N)) * 0.5
+    C = jax.random.normal(ks[4], (BH, S, N)) * 0.5
+    out = ssd_scan_kernel(x, dt, A, B, C, chunk=Q, interpret=True)
+    exp = ref.ssd_scan_ref(x, dt, A, B, C)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_ops_wrappers_match_model_layout():
+    from repro.kernels.ops import attention_bshd, ssd_bshn
+    from repro.models.attention import (chunked_attention,
+                                        group_query_heads, ungroup_heads)
+    b, s, h, kvh, d = 2, 64, 4, 2, 32
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, s, h, d))
+    k = jax.random.normal(ks[1], (b, s, kvh, d))
+    v = jax.random.normal(ks[2], (b, s, kvh, d))
+    out = attention_bshd(q, k, v, n_heads=h, n_kv_heads=kvh, block_q=32,
+                         block_k=32, interpret=True)
+    exp = ungroup_heads(chunked_attention(
+        group_query_heads(q, kvh), k, v, causal=True, q_chunk=32,
+        kv_chunk=32))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=2e-5, atol=2e-5)

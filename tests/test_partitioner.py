@@ -1,0 +1,76 @@
+"""Unit tests: §3.2 partitioning policy (eqs. 3–4)."""
+import pytest
+
+from repro.core import (DeviceKind, GroupSpec, HeterogeneousPartitioner,
+                        IterationSpace, ThroughputTracker)
+
+
+def make(groups, n=10_000, alpha=1.0):
+    tr = ThroughputTracker(alpha)
+    space = IterationSpace(0, n)
+    return HeterogeneousPartitioner(space, groups, tr), tr, space
+
+
+def test_accel_gets_fixed_chunk():
+    p, tr, _ = make({"a": GroupSpec("a", DeviceKind.ACCEL, fixed_chunk=640)})
+    tok = p.next_token("a")
+    assert tok.chunk.size == 640
+    assert tok.is_accel
+
+
+def test_cpu_chunk_is_lambda_proportional():
+    groups = {
+        "a": GroupSpec("a", DeviceKind.ACCEL, fixed_chunk=1536,
+                       init_throughput=75.0),
+        "c": GroupSpec("c", DeviceKind.BIG, init_throughput=25.0),
+    }
+    p, tr, _ = make(groups)
+    tok = p.next_token("c")
+    # eq. (4): C = G·λ_C/λ_G = 1536·25/75 = 512
+    assert tok.chunk.size == 512
+
+
+def test_min_chunk_respected():
+    groups = {
+        "a": GroupSpec("a", DeviceKind.ACCEL, fixed_chunk=1000,
+                       init_throughput=1000.0),
+        "c": GroupSpec("c", DeviceKind.BIG, init_throughput=0.001,
+                       min_chunk=17),
+    }
+    p, _, _ = make(groups)
+    assert p.next_token("c").chunk.size == 17
+
+
+def test_final_chunk_shrinks_to_exhaust():
+    p, _, space = make(
+        {"a": GroupSpec("a", DeviceKind.ACCEL, fixed_chunk=640)}, n=1000)
+    sizes = []
+    while True:
+        t = p.next_token("a")
+        if t is None:
+            break
+        sizes.append(t.chunk.size)
+    assert sum(sizes) == 1000
+    assert sizes == [640, 360]
+
+
+def test_elastic_add_remove():
+    groups = {"a": GroupSpec("a", DeviceKind.ACCEL, fixed_chunk=100,
+                             init_throughput=10.0)}
+    p, tr, _ = make(groups)
+    p.add_group(GroupSpec("new", DeviceKind.LITTLE, init_throughput=5.0))
+    tok = p.next_token("new")
+    assert tok.chunk.size == 50          # 100 · 5/10
+    p.remove_group("new")
+    assert p.next_token("new") is None
+
+
+def test_requeue_restores_work():
+    p, _, space = make(
+        {"a": GroupSpec("a", DeviceKind.ACCEL, fixed_chunk=600)}, n=600)
+    tok = p.next_token("a")
+    assert space.remaining == 0
+    p.requeue(tok.chunk)
+    assert space.remaining == 600
+    tok2 = p.next_token("a")
+    assert tok2.chunk.size == 600

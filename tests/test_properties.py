@@ -1,0 +1,164 @@
+"""Hypothesis property tests on the system's invariants."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Chunk, ChunkRecord, DeviceKind, GroupSpec,
+                        HeterogeneousPartitioner, IterationSpace,
+                        OverheadLedger, ThroughputTracker, Token,
+                        search_chunk)
+from repro.core.simulate import SimConfig, simulate
+from repro.core.platforms import IVY, EXYNOS
+
+
+# ---------------------------------------------------------------------------
+# work conservation: the partitioner hands out every iteration exactly once
+# ---------------------------------------------------------------------------
+
+@given(
+    n=st.integers(1, 50_000),
+    G=st.integers(1, 4096),
+    lams=st.lists(st.floats(0.01, 1000.0), min_size=0, max_size=4),
+    order_seed=st.integers(0, 2**16),
+)
+@settings(max_examples=60, deadline=None)
+def test_partitioner_work_conservation(n, G, lams, order_seed):
+    import random
+    rng = random.Random(order_seed)
+    groups = {"accel": GroupSpec("accel", DeviceKind.ACCEL, fixed_chunk=G,
+                                 init_throughput=100.0)}
+    for i, lam in enumerate(lams):
+        groups[f"c{i}"] = GroupSpec(f"c{i}", DeviceKind.BIG,
+                                    init_throughput=lam, min_chunk=1)
+    tr = ThroughputTracker()
+    space = IterationSpace(0, n)
+    part = HeterogeneousPartitioner(space, groups, tr)
+    names = list(groups)
+    seen = []
+    while True:
+        name = rng.choice(names)
+        tok = part.next_token(name)
+        if tok is None:
+            if space.remaining == 0:
+                break
+            continue
+        seen.append(tok.chunk)
+    total = sum(c.size for c in seen)
+    assert total == n
+    # ranges are disjoint and cover [0, n)
+    seen.sort(key=lambda c: c.begin)
+    pos = 0
+    for c in seen:
+        assert c.begin == pos
+        pos = c.end
+    assert pos == n
+
+
+@given(
+    lam_ref=st.floats(1.0, 1e6),
+    lam_c=st.floats(1.0, 1e6),
+    G=st.integers(1, 1 << 20),
+)
+@settings(max_examples=100, deadline=None)
+def test_eq4_proportionality(lam_ref, lam_c, G):
+    groups = {
+        "a": GroupSpec("a", DeviceKind.ACCEL, fixed_chunk=G,
+                       init_throughput=lam_ref),
+        "c": GroupSpec("c", DeviceKind.BIG, init_throughput=lam_c,
+                       min_chunk=1),
+    }
+    tr = ThroughputTracker()
+    part = HeterogeneousPartitioner(IterationSpace(0, 1 << 40), groups, tr)
+    size = part.chunk_size_for("c")
+    assert size == max(1, int(round(G * lam_c / lam_ref)))
+
+
+# ---------------------------------------------------------------------------
+# ledger: fractions non-negative; device phases sum to <= device_time
+# ---------------------------------------------------------------------------
+
+@given(st.lists(
+    st.tuples(st.floats(0, 1), st.floats(0, 1), st.floats(0, 1),
+              st.floats(0, 1), st.floats(0, 1)),
+    min_size=1, max_size=20))
+@settings(max_examples=50, deadline=None)
+def test_ledger_nonnegative(durations):
+    led = OverheadLedger()
+    t = 0.0
+    for sp, hd, kl, ex, dh in durations:
+        tc1 = t
+        tc2 = tc1 + sp
+        tg1 = tc2
+        tg2 = tg1 + hd
+        tg3 = tg2 + kl
+        tg4 = tg3 + ex
+        tg5 = tg4 + dh
+        tc3 = tg5 + 0.001
+        led.add(ChunkRecord(Token(Chunk(0, 10), "g", DeviceKind.ACCEL),
+                            tc1=tc1, tc2=tc2, tc3=tc3, tg1=tg1, tg2=tg2,
+                            tg3=tg3, tg4=tg4, tg5=tg5))
+        t = tc3
+    rep = led.report(max(t, 1e-9), "g")
+    for k in ("O_sp", "O_hd", "O_kl", "O_dh", "O_td"):
+        assert rep[k] >= 0.0
+    assert rep["O_sp"] + rep["O_hd"] + rep["O_kl"] + rep["O_dh"] \
+        + rep["O_td"] + rep["kernel_frac"] <= 1.0 + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# chunk search: result is a tried multiple of the seed, never above max
+# ---------------------------------------------------------------------------
+
+@given(
+    seed=st.integers(1, 2048),
+    peak_at_mult=st.integers(1, 16),
+    max_chunk=st.integers(1, 1 << 16),
+)
+@settings(max_examples=100, deadline=None)
+def test_search_chunk_invariants(seed, peak_at_mult, max_chunk):
+    peak_at = seed * peak_at_mult
+
+    def f(c):
+        occ = min(1.0, c / peak_at)
+        pen = 1.0 if c <= peak_at else 1.0 / (1 + (c / peak_at - 1))
+        return 100 * occ * pen
+
+    tr = search_chunk(f, seed, max_chunk=max_chunk)
+    if tr.tried:
+        assert tr.best_chunk <= max_chunk
+        assert tr.best_chunk % seed == 0
+        assert tr.best_lambda == max(l for _, l in tr.tried)
+
+
+# ---------------------------------------------------------------------------
+# simulator invariants under random configurations
+# ---------------------------------------------------------------------------
+
+@given(
+    n_big=st.integers(1, 4),
+    n_little=st.integers(0, 4),
+    priority=st.booleans(),
+    ts=st.integers(1, 3),
+    n=st.integers(1000, 200_000),
+    plat=st.sampled_from([IVY, EXYNOS]),
+)
+@settings(max_examples=25, deadline=None)
+def test_simulator_invariants(n_big, n_little, priority, ts, n, plat):
+    if plat.n_little == 0:
+        n_little = 0
+    cfg = SimConfig(n_big=n_big, n_little=n_little, priority=priority,
+                    timesteps=ts, n_iterations=n)
+    r = simulate(plat, cfg)
+    assert sum(r.per_device_items.values()) == n * ts
+    assert r.time_ms > 0
+    assert r.energy.total_j > 0
+    assert r.edp == pytest.approx(r.energy.total_j * r.time_ms / 1e3)
+    for k in ("O_sp", "O_hd", "O_kl", "O_dh", "O_td"):
+        assert 0.0 <= r.overheads[k] <= 1.0
+    # priority can only help (or leave unchanged) total time
+    if priority:
+        base = simulate(plat, SimConfig(
+            n_big=n_big, n_little=n_little, priority=False,
+            timesteps=ts, n_iterations=n))
+        assert r.time_ms <= base.time_ms * 1.001

@@ -1,0 +1,102 @@
+"""Threaded Dynamic scheduler runtime: conservation, balance, faults,
+elasticity, async drain."""
+import time
+
+import pytest
+
+from repro.core import (DeviceKind, DynamicScheduler, GroupSpec,
+                        SleepExecutor)
+from repro.core.dispatch import CallableExecutor
+from repro.runtime.elastic import ElasticController
+
+
+def groups3(g=400):
+    return {
+        "accel": GroupSpec("accel", DeviceKind.ACCEL, fixed_chunk=g,
+                           init_throughput=400_000),
+        "cpu0": GroupSpec("cpu0", DeviceKind.BIG, init_throughput=100_000,
+                          min_chunk=4),
+        "cpu1": GroupSpec("cpu1", DeviceKind.BIG, init_throughput=100_000,
+                          min_chunk=4),
+    }
+
+
+def execs3(fail=None):
+    return {
+        "accel": SleepExecutor(rate=400_000),
+        "cpu0": SleepExecutor(rate=100_000),
+        "cpu1": SleepExecutor(rate=100_000,
+                              fail_after=fail),
+    }
+
+
+def test_work_conservation_and_split():
+    s = DynamicScheduler(groups3(), execs3(), alpha=0.5)
+    res = s.run(0, 20_000)
+    assert res.iterations == 20_000
+    assert sum(res.per_group_items.values()) == 20_000
+    # accel is 4x one cpu: expect roughly 2/3 of the work (loose band)
+    assert res.per_group_items["accel"] > 10_000
+
+
+def test_failed_group_work_is_absorbed():
+    s = DynamicScheduler(groups3(), execs3(fail=2), alpha=0.5)
+    res = s.run(0, 20_000)
+    assert "cpu1" in res.failed_groups
+    assert res.iterations >= 20_000           # requeued chunk re-executed
+    assert res.per_group_items["accel"] + res.per_group_items["cpu0"] \
+        + res.per_group_items.get("cpu1", 0) == res.iterations
+
+
+def test_elastic_join_mid_run():
+    s = DynamicScheduler(
+        {"accel": GroupSpec("accel", DeviceKind.ACCEL, fixed_chunk=100,
+                            init_throughput=50_000)},
+        {"accel": SleepExecutor(rate=50_000)})
+    ctl = ElasticController(s)
+    import threading
+
+    def join_later():
+        time.sleep(0.05)
+        ctl.join("late", DeviceKind.BIG, SleepExecutor(rate=50_000),
+                 min_chunk=4)
+
+    th = threading.Thread(target=join_later)
+    th.start()
+    res = s.run(0, 30_000)
+    th.join()
+    assert res.iterations == 30_000
+    assert res.per_group_items.get("late", 0) > 0
+
+
+def test_async_depth_records_all_chunks():
+    from repro.core import JaxChunkExecutor
+    import jax.numpy as jnp
+    import numpy as np
+
+    def step(x):
+        return x * 2.0
+
+    ex = JaxChunkExecutor(step, lambda tok: np.ones(tok.chunk.size,
+                                                    np.float32),
+                          fetch=lambda o: float(jnp.sum(o)),
+                          async_depth=3)
+    s = DynamicScheduler(
+        {"a": GroupSpec("a", DeviceKind.ACCEL, fixed_chunk=64)}, {"a": ex})
+    res = s.run(0, 1000)
+    assert res.iterations == 1000
+    assert all(r.tg5 >= r.tg3 for r in res.records)
+    assert all("result" in r.meta for r in res.records)
+
+
+def test_overheads_measured_positive():
+    s = DynamicScheduler(groups3(), {
+        "accel": SleepExecutor(rate=400_000, t_hd=0.001, t_kl=0.002,
+                               t_dh=0.001),
+        "cpu0": SleepExecutor(rate=100_000),
+        "cpu1": SleepExecutor(rate=100_000),
+    }, alpha=0.5)
+    res = s.run(0, 10_000)
+    ov = res.overheads["accel"]
+    assert ov["O_kl"] > ov["O_hd"] > 0
+    assert ov["kernel_frac"] > 0

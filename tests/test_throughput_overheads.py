@@ -1,0 +1,55 @@
+"""Unit tests: eqs. (1)–(2) throughput and eqs. (5)–(9) overhead ledger."""
+import pytest
+
+from repro.core import (Chunk, ChunkRecord, DeviceKind, OverheadLedger,
+                        ThroughputTracker, Token)
+
+
+def rec(group="g", size=100, tc1=0.0, tc2=0.01, tc3=1.2,
+        tg1=0.02, tg2=0.05, tg3=0.10, tg4=1.0, tg5=1.1,
+        kind=DeviceKind.ACCEL):
+    return ChunkRecord(Token(Chunk(0, size), group, kind),
+                       tc1=tc1, tc2=tc2, tc3=tc3, tg1=tg1, tg2=tg2,
+                       tg3=tg3, tg4=tg4, tg5=tg5)
+
+
+def test_throughput_eq_1():
+    r = rec(size=540)
+    # λ = G / T(tG_i) with T = Tg5 − Tg1 (includes transfers, footnote 1)
+    assert r.throughput == pytest.approx(540 / (1.1 - 0.02))
+
+
+def test_ewma_alpha_one_is_paper_faithful():
+    tr = ThroughputTracker(alpha=1.0)
+    tr.update(rec(size=100, tg1=0.0, tg5=1.0))    # λ=100
+    tr.update(rec(size=300, tg1=0.0, tg5=1.0))    # λ=300
+    assert tr.get("g") == pytest.approx(300)      # previous interval only
+
+
+def test_ewma_smoothing():
+    tr = ThroughputTracker(alpha=0.5)
+    tr.update(rec(size=100, tg1=0.0, tg5=1.0))
+    tr.update(rec(size=300, tg1=0.0, tg5=1.0))
+    assert tr.get("g") == pytest.approx(200)
+
+
+def test_overhead_fractions_eqs_5_to_9():
+    led = OverheadLedger()
+    led.add(rec())
+    tot = 2.0
+    f = led.report(tot, "g")
+    assert f["O_sp"] == pytest.approx((0.01 - 0.0) / tot)
+    assert f["O_hd"] == pytest.approx((0.05 - 0.02) / tot)
+    assert f["O_kl"] == pytest.approx((0.10 - 0.05) / tot)
+    assert f["O_dh"] == pytest.approx((1.1 - 1.0) / tot)
+    # O_td = (Tc3−Tc2) − (Tg5−Tg1)
+    assert f["O_td"] == pytest.approx(((1.2 - 0.01) - (1.1 - 0.02)) / tot)
+    assert f["n_chunks"] == 1
+
+
+def test_ledger_aggregates_groups():
+    led = OverheadLedger()
+    led.add(rec(group="a"))
+    led.add(rec(group="b"))
+    assert led.totals().n_chunks == 2
+    assert set(led.groups()) == {"a", "b"}
