@@ -1,0 +1,101 @@
+"""Queue-saturation benchmark: queue-delay percentiles vs. offered load.
+
+An open-loop arrival process submits fixed-size jobs at a configurable
+fraction of the system's aggregate capacity while a JobService daemon
+drains them into SleepExecutor-backed DynamicScheduler runs (deterministic
+service times, so the numbers characterize the *queue layer*, not model
+compute). Below saturation the queue delay is flat; past it (offered load
+> 1.0) delay grows until the admission controller's SLO gate starts
+shedding load — the p50/p95/p99 rows plus done/deferred/rejected counts
+show both regimes.
+
+Run:  PYTHONPATH=src python -m benchmarks.run            (all benchmarks)
+      PYTHONPATH=src python -m benchmarks.queue_saturation
+"""
+from __future__ import annotations
+
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.core import DeviceKind, DynamicScheduler, GroupSpec, SleepExecutor
+from repro.queue import (AdmissionController, Job, JobService, QueueManager)
+
+# deterministic service rates (items/s); aggregate capacity ≈ their sum
+ACCEL_RATE = 20_000.0
+CPU_RATE = 5_000.0
+JOB_ITEMS = 250                       # one job ≈ 10 ms of aggregate capacity
+SLO_DELAY_S = 0.5
+WINDOW_S = 1.5                        # arrival window per load point
+LOADS = (0.5, 0.9, 1.2, 2.0)
+
+
+def _make_scheduler() -> DynamicScheduler:
+    groups = {
+        "accel": GroupSpec("accel", DeviceKind.ACCEL, fixed_chunk=512,
+                           init_throughput=ACCEL_RATE),
+        "cpu0": GroupSpec("cpu0", DeviceKind.BIG, init_throughput=CPU_RATE,
+                          min_chunk=8),
+    }
+    execs = {"accel": SleepExecutor(rate=ACCEL_RATE),
+             "cpu0": SleepExecutor(rate=CPU_RATE)}
+    return DynamicScheduler(groups, execs)
+
+
+def _run_load(load: float):
+    capacity_items_s = ACCEL_RATE + CPU_RATE
+    jobs_per_s = load * capacity_items_s / JOB_ITEMS
+    n_jobs = max(1, int(jobs_per_s * WINDOW_S))
+    gap = 1.0 / jobs_per_s
+
+    queue = QueueManager()
+    admission = AdmissionController(queue, slo_delay_s=SLO_DELAY_S)
+    admission.on_group_join("accel", ACCEL_RATE)
+    admission.on_group_join("cpu0", CPU_RATE)
+    service = JobService(_make_scheduler, queue=queue, admission=admission,
+                         batch_jobs=8, poll_s=0.002)
+    service.start()
+    jobs = []
+    try:
+        for i in range(n_jobs):
+            job = Job(items=JOB_ITEMS, priority=i % 3)
+            jobs.append(job)
+            service.submit(job)
+            time.sleep(gap)
+        service.retry_deferred()
+        deadline = time.monotonic() + 30.0
+        while time.monotonic() < deadline:
+            if queue.depth() == 0 and all(j.terminal for j in jobs
+                                          if j.state.value != "pending"):
+                break
+            time.sleep(0.01)
+    finally:
+        service.stop()
+    return jobs, service, admission
+
+
+def rows_queue_saturation():
+    out = []
+    for load in LOADS:
+        jobs, service, admission = _run_load(load)
+        pct = service.stats.delay_percentiles()
+        derived = (f"p50={pct['p50'] * 1e3:.2f}ms;"
+                   f"p95={pct['p95'] * 1e3:.2f}ms;"
+                   f"p99={pct['p99'] * 1e3:.2f}ms;"
+                   f"done={service.stats.done};"
+                   f"deferred={admission.deferred};"
+                   f"rejected={admission.rejected}")
+        out.append((f"queue_saturation/load_{load:g}",
+                    pct["p50"] * 1e6, derived))
+    return out
+
+
+ALL = [rows_queue_saturation]
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for name, us, derived in rows_queue_saturation():
+        print(f"{name},{us:.3f},{derived}")

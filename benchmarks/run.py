@@ -17,9 +17,10 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 
 
 def main() -> None:
-    from benchmarks.paper_figures import ALL
+    from benchmarks.paper_figures import ALL as PAPER
+    from benchmarks.queue_saturation import ALL as QUEUE
     print("name,us_per_call,derived")
-    for fn in ALL:
+    for fn in PAPER + QUEUE:
         for name, us, derived in fn():
             print(f"{name},{us:.3f},{derived}")
 

@@ -1,0 +1,6 @@
+#!/usr/bin/env bash
+# Fast contributor signal (<60s): everything except the slow-marked
+# integration / model-compile tests. Full suite: `python -m pytest -q`.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+exec python -m pytest -q -m "not slow" "$@"

@@ -3,6 +3,12 @@
   PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --reduced \\
       --requests 64 --prompt-len 32 --decode-tokens 8 \\
       --groups accel:chunk=8:async=2,cpu0:slow=2
+
+Queued mode (admission control + priority queue + journal):
+
+  PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --reduced \\
+      --queue --requests 64 --job-items 2 --slo 5.0 \\
+      --journal /tmp/serve.journal.jsonl
 """
 from __future__ import annotations
 
@@ -12,6 +18,7 @@ import json
 from repro.configs.base import reduced
 from repro.configs.registry import get_config
 from repro.launch.train import parse_groups
+from repro.queue import Job
 from repro.serve.engine import HeteroServeEngine
 
 
@@ -24,7 +31,23 @@ def main():
     ap.add_argument("--decode-tokens", type=int, default=8)
     ap.add_argument("--groups", default="accel:chunk=8:async=2,cpu0")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--queue", action="store_true",
+                    help="submit requests as prioritized jobs through "
+                         "admission control instead of one bare batch")
+    ap.add_argument("--job-items", type=int, default=1,
+                    help="requests per job in --queue mode")
+    ap.add_argument("--batch-jobs", type=int, default=8,
+                    help="jobs drained per scheduler run in --queue mode")
+    ap.add_argument("--slo", type=float, default=None,
+                    help="queue-delay SLO seconds (enables admission "
+                         "backpressure in --queue mode)")
+    ap.add_argument("--journal", default=None,
+                    help="JSONL journal path for durable job state")
     args = ap.parse_args()
+    if args.job_items < 1:
+        ap.error("--job-items must be >= 1")
+    if args.requests < 1:
+        ap.error("--requests must be >= 1")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -33,6 +56,27 @@ def main():
     eng = HeteroServeEngine(cfg, groups, prompt_len=args.prompt_len,
                             decode_tokens=args.decode_tokens,
                             seed=args.seed)
+    if args.queue:
+        # cover --requests exactly: full jobs plus a remainder job
+        full, rem = divmod(args.requests, args.job_items)
+        sizes = [args.job_items] * full + ([rem] if rem else [])
+        jobs = [Job(items=n, priority=i % 3)
+                for i, n in enumerate(sizes)]
+        rep = eng.serve_jobs(jobs, slo_delay_s=args.slo,
+                             batch_jobs=args.batch_jobs,
+                             journal_path=args.journal)
+        print(json.dumps({
+            "jobs": rep.jobs, "done": rep.done, "failed": rep.failed,
+            "cancelled": rep.cancelled, "requeues": rep.requeues,
+            "batches": rep.batches, "new_tokens": rep.new_tokens,
+            "time_s": round(rep.time_s, 3),
+            "tok_per_s": round(rep.new_tokens / max(rep.time_s, 1e-9), 1),
+            "queue_delay_s": {k: round(v, 4)
+                              for k, v in rep.queue_delay.items()},
+            "per_group": rep.per_group_items,
+            "dead_groups": rep.dead_groups,
+        }, indent=2))
+        return
     rep = eng.serve(args.requests)
     print(json.dumps({
         "requests": rep.requests,

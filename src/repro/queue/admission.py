@@ -1,0 +1,135 @@
+"""Admission control: backpressure before work reaches the scheduler.
+
+Capacity is estimated from the signals the runtime already produces — the
+per-group λ-estimates of ThroughputTracker (eqs. 1–2) derated by the §3.3
+overhead fractions of OverheadLedger (an accelerator spending 30% of its
+busy time in O_hd/O_kl/O_dh is not a λ-worth of useful capacity). The
+projected queue delay for a new job is then
+
+    delay ≈ (backlog_items + job.items) / Σ_G λ_G · useful_G
+
+and the decision is a three-way gate against the delay SLO:
+
+    delay ≤ slo              → ADMIT
+    delay ≤ defer_factor·slo → DEFER   (caller should retry; bounded queue)
+    otherwise                → REJECT  (shed load instead of building an
+                                        unbounded backlog — the queue
+                                        stays inside the SLO envelope)
+
+Group membership is event-driven: ElasticController join/leave and
+scheduler group failures call on_group_join/on_group_leave, so capacity
+reacts to topology changes without polling.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass
+from enum import Enum
+from typing import Dict, Optional
+
+from repro.core.overheads import OverheadLedger
+from repro.core.throughput import ThroughputTracker
+from repro.queue.job import Job, JobState
+from repro.queue.manager import QueueManager
+
+
+class Decision(str, Enum):
+    ADMIT = "admit"
+    DEFER = "defer"
+    REJECT = "reject"
+
+
+@dataclass
+class AdmissionDecision:
+    decision: Decision
+    projected_delay_s: float
+    capacity_items_s: float
+    reason: str = ""
+
+    def __bool__(self) -> bool:
+        return self.decision == Decision.ADMIT
+
+
+class AdmissionController:
+    def __init__(self, queue: QueueManager,
+                 tracker: Optional[ThroughputTracker] = None,
+                 ledger: Optional[OverheadLedger] = None,
+                 slo_delay_s: float = 1.0,
+                 defer_factor: float = 4.0,
+                 min_capacity: float = 1e-6):
+        self.queue = queue
+        self.tracker = tracker
+        self.ledger = ledger
+        self.slo_delay_s = slo_delay_s
+        self.defer_factor = defer_factor
+        self.min_capacity = min_capacity
+        self._groups: Dict[str, float] = {}      # name -> λ seed
+        self._lock = threading.Lock()
+        # counters for observability / tests
+        self.admitted = 0
+        self.deferred = 0
+        self.rejected = 0
+
+    # -- topology events (ElasticController / scheduler failures) ------
+    def on_group_join(self, name: str, lam_seed: float = 1.0) -> None:
+        with self._lock:
+            self._groups[name] = lam_seed
+
+    def on_group_leave(self, name: str) -> None:
+        with self._lock:
+            self._groups.pop(name, None)
+
+    def groups(self) -> Dict[str, float]:
+        with self._lock:
+            return dict(self._groups)
+
+    # -- capacity model ------------------------------------------------
+    def _useful_fraction(self, group: str) -> float:
+        """1 − offload-overhead share of the group's busy time."""
+        if self.ledger is None:
+            return 1.0
+        tot = self.ledger.totals(group)
+        if tot.n_chunks == 0:
+            return 1.0
+        busy = tot.kernel + tot.sp + tot.hd + tot.kl + tot.dh + tot.td
+        if busy <= 0.0:
+            return 1.0
+        return max(0.1, tot.kernel / busy)
+
+    def capacity_items_s(self) -> float:
+        """Aggregate useful throughput (items/s) of live groups."""
+        cap = 0.0
+        for name, seed in self.groups().items():
+            lam = self.tracker.get(name) if self.tracker is not None else seed
+            if lam <= 0.0:
+                lam = seed
+            cap += lam * self._useful_fraction(name)
+        return max(cap, self.min_capacity)
+
+    def projected_delay_s(self, extra_items: int = 0) -> float:
+        backlog = self.queue.backlog_items() + extra_items
+        return backlog / self.capacity_items_s()
+
+    # -- the gate ------------------------------------------------------
+    def admit(self, job: Job) -> AdmissionDecision:
+        """Decide on a PENDING job; ADMIT enqueues it, REJECT cancels it,
+        DEFER leaves it PENDING for the caller to retry."""
+        cap = self.capacity_items_s()
+        delay = (self.queue.backlog_items() + job.items) / cap
+        if delay <= self.slo_delay_s:
+            self.queue.put(job)
+            self.admitted += 1
+            return AdmissionDecision(Decision.ADMIT, delay, cap)
+        if delay <= self.defer_factor * self.slo_delay_s:
+            self.deferred += 1
+            return AdmissionDecision(
+                Decision.DEFER, delay, cap,
+                reason=f"projected delay {delay:.3f}s > SLO "
+                       f"{self.slo_delay_s:.3f}s")
+        job.meta["rejected_delay_s"] = delay
+        job.transition(JobState.CANCELLED)
+        self.rejected += 1
+        return AdmissionDecision(
+            Decision.REJECT, delay, cap,
+            reason=f"projected delay {delay:.3f}s > "
+                   f"{self.defer_factor:.1f}×SLO")

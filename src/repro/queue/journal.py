@@ -1,0 +1,101 @@
+"""Append-only JSONL journal: durability + crash recovery for the queue.
+
+Every state transition appends one line ``{"ts", "event", "job"}``; the
+file is the source of truth after a crash. Replay is last-write-wins per
+job id; a torn final line (the classic crash-mid-write artifact) is
+skipped, matching what GPUScheduler's sqliteStore gets from SQLite's
+atomic commits — but with zero dependencies and human-greppable storage.
+
+``recover()`` re-materializes the queue: jobs that were in flight
+(ADMITTED / RUNNING / PENDING / REQUEUED) when the process died come back
+as re-queueable jobs; terminal jobs come back as history.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from typing import Dict, List, Optional, Tuple
+
+from repro.queue.job import Job, JobState
+
+_TRUNCATE_SENTINEL = object()
+
+
+class JournalStore:
+    def __init__(self, path: str, fsync: bool = False):
+        self.path = str(path)
+        self.fsync = fsync
+        self._lock = threading.Lock()
+        directory = os.path.dirname(self.path)
+        if directory:
+            os.makedirs(directory, exist_ok=True)
+        self._fh = open(self.path, "a", encoding="utf-8")
+
+    # -- write path ----------------------------------------------------
+    def record(self, job: Job, event: Optional[str] = None) -> None:
+        line = json.dumps({"ts": time.time(),
+                           "event": event or job.state.value,
+                           "job": job.to_dict()}, sort_keys=True)
+        with self._lock:
+            self._fh.write(line + "\n")
+            self._fh.flush()
+            if self.fsync:
+                os.fsync(self._fh.fileno())
+
+    def close(self) -> None:
+        with self._lock:
+            if not self._fh.closed:
+                self._fh.close()
+
+    def __enter__(self) -> "JournalStore":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- read path -----------------------------------------------------
+    @classmethod
+    def replay(cls, path: str) -> Dict[str, Job]:
+        """Reconstruct the final state of every journaled job.
+
+        Corrupt / torn lines are skipped, not fatal: an append-only log's
+        only legal corruption is a truncated tail.
+        """
+        jobs: Dict[str, Job] = {}
+        if not os.path.exists(path):
+            return jobs
+        with open(path, "r", encoding="utf-8") as fh:
+            for raw in fh:
+                raw = raw.strip()
+                if not raw:
+                    continue
+                try:
+                    entry = json.loads(raw)
+                    job = Job.from_dict(entry["job"])
+                except (json.JSONDecodeError, KeyError, TypeError,
+                        ValueError):
+                    continue
+                jobs[job.job_id] = job
+        return jobs
+
+    @classmethod
+    def recover(cls, path: str) -> Tuple[List[Job], Dict[str, Job]]:
+        """Crash recovery: (jobs to re-admit, full final-state map).
+
+        In-flight jobs are rewound to a re-queueable state: a RUNNING job
+        becomes REQUEUED (its attempt died with the process); ADMITTED and
+        REQUEUED jobs keep their state; PENDING jobs are returned as-is
+        for a fresh admission decision.
+        """
+        jobs = cls.replay(path)
+        to_requeue: List[Job] = []
+        for job in jobs.values():
+            if job.terminal:
+                continue
+            if job.state == JobState.RUNNING:
+                job.transition(JobState.REQUEUED)
+            to_requeue.append(job)
+        to_requeue.sort(key=lambda j: (j.priority, j.created_at))
+        return to_requeue, jobs

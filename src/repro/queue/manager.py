@@ -1,0 +1,153 @@
+"""Thread-safe priority queue over Jobs, feeding the dynamic scheduler.
+
+Heap entries are ``(priority, seq, job_id)`` — ``seq`` is a monotonically
+increasing admission counter so equal priorities drain FIFO and a requeued
+job re-enters *behind* equal-priority work admitted while it was running
+(no starvation of fresh traffic by a crash-looping job). Cancellation is
+lazy: the entry stays in the heap and is skipped at pop() when its job is
+no longer ADMITTED, which keeps cancel() O(1).
+
+Per-group in-flight tracking (``mark_running`` / ``mark_finished``) gives
+the admission controller and the watchdog a live view of which groups hold
+work, mirroring GPUScheduler's running-by-GPU map.
+
+Terminal jobs are evicted from the live map (their counts survive in
+``counts()``), so a long-lived daemon's backlog scans stay O(live jobs)
+and memory stays bounded — durability of finished state is the journal's
+job, not the queue's.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import threading
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.queue.job import Job, JobState
+
+
+class QueueManager:
+    def __init__(self):
+        self._heap: List[Tuple[int, int, str]] = []
+        self._jobs: Dict[str, Job] = {}
+        self._inflight: Dict[str, Set[str]] = {}     # group -> job ids
+        self._terminal_counts: Dict[str, int] = {}   # evicted-job history
+        self._seq = itertools.count()
+        self._lock = threading.RLock()
+        self._not_empty = threading.Condition(self._lock)
+
+    def _evict_if_terminal(self, job: Job) -> None:
+        if job.terminal:
+            self._jobs.pop(job.job_id, None)
+            self._terminal_counts[job.state.value] = \
+                self._terminal_counts.get(job.state.value, 0) + 1
+
+    # -- admission side ------------------------------------------------
+    def put(self, job: Job) -> None:
+        """Enqueue a PENDING or REQUEUED job (transitions it to ADMITTED)."""
+        with self._lock:
+            if job.state in (JobState.PENDING, JobState.REQUEUED):
+                job.transition(JobState.ADMITTED)
+            elif job.state != JobState.ADMITTED:
+                raise ValueError(
+                    f"cannot enqueue job {job.job_id} in state "
+                    f"{job.state.value}")
+            self._jobs[job.job_id] = job
+            heapq.heappush(self._heap, (job.priority, next(self._seq),
+                                        job.job_id))
+            self._not_empty.notify()
+
+    def cancel(self, job_id: str) -> bool:
+        """Cancel a queued (ADMITTED) job; heap entry removed lazily."""
+        with self._lock:
+            job = self._jobs.get(job_id)
+            if job is None or job.state != JobState.ADMITTED:
+                return False
+            job.transition(JobState.CANCELLED)
+            self._evict_if_terminal(job)
+            return True
+
+    # -- scheduler side ------------------------------------------------
+    def pop(self, timeout: Optional[float] = None) -> Optional[Job]:
+        """Highest-priority ADMITTED job, or None after ``timeout``.
+
+        ``timeout=None`` means non-blocking; the returned job stays
+        ADMITTED — the service marks it RUNNING once it is bound to a
+        scheduler run (two-phase, so a crash between pop and dispatch is
+        recoverable from the journal as a still-queued job).
+        """
+        with self._not_empty:
+            while True:
+                job = self._pop_admitted_locked()
+                if job is not None:
+                    return job
+                if not timeout:
+                    return None
+                if not self._not_empty.wait(timeout):
+                    return self._pop_admitted_locked()
+
+    def _pop_admitted_locked(self) -> Optional[Job]:
+        while self._heap:
+            _, _, job_id = heapq.heappop(self._heap)
+            job = self._jobs.get(job_id)
+            if job is not None and job.state == JobState.ADMITTED:
+                return job
+        return None
+
+    def mark_running(self, job: Job, group: str = "*") -> None:
+        with self._lock:
+            job.transition(JobState.RUNNING)
+            self._inflight.setdefault(group, set()).add(job.job_id)
+
+    def mark_finished(self, job: Job, state: JobState) -> None:
+        """Terminal (or REQUEUED) transition + in-flight release."""
+        with self._lock:
+            job.transition(state)
+            for ids in self._inflight.values():
+                ids.discard(job.job_id)
+            self._evict_if_terminal(job)
+
+    def requeue(self, job: Job) -> None:
+        """Put a REQUEUED job back on the heap (→ ADMITTED)."""
+        with self._lock:
+            if job.state != JobState.REQUEUED:
+                raise ValueError(
+                    f"requeue expects REQUEUED, got {job.state.value}")
+            self.put(job)
+
+    # -- introspection -------------------------------------------------
+    def get(self, job_id: str) -> Optional[Job]:
+        with self._lock:
+            return self._jobs.get(job_id)
+
+    def depth(self) -> int:
+        """Number of jobs currently waiting (ADMITTED)."""
+        with self._lock:
+            return sum(1 for j in self._jobs.values()
+                       if j.state == JobState.ADMITTED)
+
+    def backlog_items(self) -> int:
+        """Total queued iterations — the admission controller's backlog."""
+        with self._lock:
+            return sum(j.items for j in self._jobs.values()
+                       if j.state == JobState.ADMITTED)
+
+    def inflight(self, group: Optional[str] = None) -> int:
+        with self._lock:
+            if group is not None:
+                return len(self._inflight.get(group, ()))
+            return len(set().union(*self._inflight.values())) \
+                if self._inflight else 0
+
+    def jobs(self, state: Optional[JobState] = None) -> List[Job]:
+        with self._lock:
+            if state is None:
+                return list(self._jobs.values())
+            return [j for j in self._jobs.values() if j.state == state]
+
+    def counts(self) -> Dict[str, int]:
+        with self._lock:
+            out = dict(self._terminal_counts)
+            for j in self._jobs.values():
+                out[j.state.value] = out.get(j.state.value, 0) + 1
+            return out

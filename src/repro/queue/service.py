@@ -1,0 +1,245 @@
+"""JobService: the daemon loop that drains the queue into scheduler runs.
+
+Each drain pops up to ``batch_jobs`` jobs (priority order), concatenates
+their items into one iteration space, and hands it to a fresh
+DynamicScheduler run — the paper's §3.1 pipeline is the *execution* layer;
+this is the *admission-to-execution* bridge. When a device group dies
+mid-run the scheduler's own chunk requeue (work conservation on iteration
+count) still completes the batch, so jobs are DONE; a run that loses
+*all* groups completes only part of its count, and since the runtime
+conserves count, not iteration identity, there is no way to attribute the
+partial completion to specific jobs — the whole batch is REQUEUED
+(at-least-once semantics, bounded by ``max_attempts``). This is the
+ChunkFailure → requeue conversion the fault-tolerance layer promises.
+
+Group failures observed in a run (in-band ChunkFailure) and hangs caught
+by the runtime Watchdog both flow to the AdmissionController as
+on_group_leave events, shrinking advertised capacity immediately.
+"""
+from __future__ import annotations
+
+import logging
+import math
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence
+
+from repro.core.scheduler import DynamicScheduler, ScheduleResult
+from repro.queue.admission import AdmissionController, AdmissionDecision, \
+    Decision
+from repro.queue.job import Job, JobState
+from repro.queue.journal import JournalStore
+from repro.queue.manager import QueueManager
+
+try:                                    # optional hang detection
+    from repro.runtime.fault_tolerance import Watchdog
+except Exception:                       # pragma: no cover
+    Watchdog = None                     # type: ignore
+
+logger = logging.getLogger(__name__)
+
+
+def percentiles(xs: Sequence[float],
+                ps: Sequence[float] = (50.0, 95.0, 99.0)) \
+        -> Dict[str, float]:
+    """Nearest-rank percentiles, {"p50": ..} — no numpy dependency here."""
+    out: Dict[str, float] = {}
+    if not xs:
+        return {f"p{p:g}": 0.0 for p in ps}
+    s = sorted(xs)
+    for p in ps:
+        k = max(0, min(len(s) - 1, math.ceil(p / 100.0 * len(s)) - 1))
+        out[f"p{p:g}"] = s[k]
+    return out
+
+
+@dataclass
+class BatchReport:
+    jobs: List[Job]
+    completed_items: int
+    total_items: int
+    failed_groups: List[str]
+    schedule: Optional[ScheduleResult] = None
+
+
+@dataclass
+class ServiceStats:
+    batches: int = 0
+    done: int = 0
+    failed: int = 0
+    requeues: int = 0
+    queue_delays: List[float] = field(default_factory=list)
+    per_group_items: Dict[str, int] = field(default_factory=dict)
+    errors: List[str] = field(default_factory=list)
+
+    def delay_percentiles(self) -> Dict[str, float]:
+        return percentiles(self.queue_delays)
+
+
+class JobService:
+    def __init__(self, make_scheduler: Callable[[], DynamicScheduler],
+                 queue: Optional[QueueManager] = None,
+                 admission: Optional[AdmissionController] = None,
+                 journal: Optional[JournalStore] = None,
+                 batch_jobs: int = 8, poll_s: float = 0.05,
+                 watchdog: Optional["Watchdog"] = None,
+                 on_group_failed: Optional[Callable[[str], None]] = None):
+        self.make_scheduler = make_scheduler
+        self.queue = queue or QueueManager()
+        self.admission = admission
+        self.journal = journal
+        self.batch_jobs = max(1, batch_jobs)
+        self.poll_s = poll_s
+        self.watchdog = watchdog
+        self.on_group_failed = on_group_failed
+        self.stats = ServiceStats()
+        self._deferred: List[Job] = []
+        self._lock = threading.Lock()
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    # -- journaling ----------------------------------------------------
+    def _journal(self, job: Job, event: Optional[str] = None) -> None:
+        if self.journal is not None:
+            self.journal.record(job, event)
+
+    # -- submission ----------------------------------------------------
+    def submit(self, job: Job) -> AdmissionDecision:
+        """Admission-gate a PENDING job. DEFERred jobs are retried by the
+        service loop as backlog drains; REJECTed jobs come back CANCELLED."""
+        self._journal(job, "submitted")
+        if self.admission is None:
+            self.queue.put(job)
+            self._journal(job)
+            return AdmissionDecision(Decision.ADMIT, 0.0, float("inf"))
+        dec = self.admission.admit(job)
+        if dec.decision == Decision.DEFER:
+            with self._lock:
+                self._deferred.append(job)
+        self._journal(job, "rejected" if dec.decision == Decision.REJECT
+                      else None)
+        return dec
+
+    def retry_deferred(self) -> int:
+        """Re-offer deferred jobs to the admission gate; returns #admitted."""
+        if self.admission is None:
+            return 0
+        with self._lock:
+            waiting, self._deferred = self._deferred, []
+        admitted = 0
+        for job in waiting:
+            if job.state != JobState.PENDING:      # cancelled while waiting
+                continue
+            dec = self.admission.admit(job)
+            if dec.decision == Decision.DEFER:
+                with self._lock:
+                    self._deferred.append(job)
+            else:
+                self._journal(job)
+                admitted += dec.decision == Decision.ADMIT
+        return admitted
+
+    # -- the drain -----------------------------------------------------
+    def drain_once(self, block_s: float = 0.0) -> Optional[BatchReport]:
+        """Pop a batch, run it through one DynamicScheduler, finalize."""
+        jobs: List[Job] = []
+        first = self.queue.pop(timeout=block_s or None)
+        if first is None:
+            return None
+        jobs.append(first)
+        while len(jobs) < self.batch_jobs:
+            nxt = self.queue.pop()
+            if nxt is None:
+                break
+            jobs.append(nxt)
+
+        total = sum(j.items for j in jobs)
+        for j in jobs:
+            self.queue.mark_running(j)
+            self._journal(j)
+        try:
+            sched = self.make_scheduler()
+            res = sched.run(0, total)
+            completed, failed_groups = res.iterations, res.failed_groups
+            for g, n in res.per_group_items.items():
+                self.stats.per_group_items[g] = \
+                    self.stats.per_group_items.get(g, 0) + n
+        except Exception as e:          # broken factory / run: fail the
+            res, completed, failed_groups = None, 0, []   # batch, not the
+            logger.exception("batch of %d jobs failed to run", len(jobs))
+            if len(self.stats.errors) < 100:              # daemon
+                self.stats.errors.append(repr(e))
+            for j in jobs:
+                j.meta["last_error"] = repr(e)
+
+        for g in failed_groups:
+            if self.admission is not None:
+                self.admission.on_group_leave(g)
+            if self.on_group_failed is not None:
+                self.on_group_failed(g)
+
+        # all-or-nothing per batch: the runtime conserves iteration COUNT,
+        # not identity (a re-executed chunk is fresh range at the end of
+        # the space), so a partial count cannot be attributed to specific
+        # jobs — never mark a job DONE whose items may not have run
+        done = completed >= total
+        for j in jobs:
+            if done:
+                self.queue.mark_finished(j, JobState.DONE)
+                self.stats.done += 1
+                if j.queue_delay is not None:
+                    self.stats.queue_delays.append(j.queue_delay)
+            elif j.attempts_left > 0:
+                self.queue.mark_finished(j, JobState.REQUEUED)
+                self.queue.requeue(j)
+                self.stats.requeues += 1
+            else:
+                self.queue.mark_finished(j, JobState.FAILED)
+                self.stats.failed += 1
+            self._journal(j)
+        self.stats.batches += 1
+        return BatchReport(jobs, min(completed, total), total,
+                           list(failed_groups), res)
+
+    def run_until_idle(self, timeout_s: float = 60.0) -> bool:
+        """Drain until queue + deferred list are empty; False on timeout."""
+        deadline = time.monotonic() + timeout_s
+        while time.monotonic() < deadline:
+            self.retry_deferred()
+            rep = self.drain_once()
+            if rep is not None:
+                continue
+            with self._lock:
+                idle = not self._deferred
+            if idle and self.queue.depth() == 0:
+                return True
+            time.sleep(self.poll_s)
+        return False
+
+    # -- daemon mode ---------------------------------------------------
+    def start(self) -> None:
+        if self._thread is not None:
+            return
+        self._stop.clear()
+        self._thread = threading.Thread(target=self._loop,
+                                        name="job-service", daemon=True)
+        self._thread.start()
+
+    def stop(self, join: bool = True) -> None:
+        self._stop.set()
+        if join and self._thread is not None:
+            self._thread.join(timeout=10.0)
+        self._thread = None
+
+    def _loop(self) -> None:
+        while not self._stop.is_set():
+            self.retry_deferred()
+            if self.watchdog is not None:
+                for g in self.watchdog.check():
+                    if self.admission is not None:
+                        self.admission.on_group_leave(g)
+                    if self.on_group_failed is not None:
+                        self.on_group_failed(g)
+            if self.drain_once(block_s=self.poll_s) is None:
+                time.sleep(self.poll_s)

@@ -7,6 +7,10 @@ ChunkFailure (abrupt, chunk requeued). This module is the small policy layer:
 it owns GroupSpec construction and the λ seeding choice for newcomers
 (median of current same-kind groups, so a new BIG node doesn't start with a
 wildly wrong chunk size).
+
+When an AdmissionController (repro.queue) is attached, join/leave events
+flow to it so advertised capacity — and therefore the queue-delay
+backpressure gate — tracks topology changes immediately.
 """
 from __future__ import annotations
 
@@ -18,8 +22,9 @@ from repro.core.types import DeviceKind, GroupSpec
 
 
 class ElasticController:
-    def __init__(self, scheduler: DynamicScheduler):
+    def __init__(self, scheduler: DynamicScheduler, admission=None):
         self.scheduler = scheduler
+        self.admission = admission      # Optional[AdmissionController]
 
     def _seed_lambda(self, kind: DeviceKind) -> Optional[float]:
         peers = [g for g in self.scheduler.specs.values() if g.kind == kind]
@@ -35,8 +40,12 @@ class ElasticController:
         spec = GroupSpec(name, kind, fixed_chunk=fixed_chunk,
                          min_chunk=min_chunk, init_throughput=lam)
         self.scheduler.add_group(spec, executor)
+        if self.admission is not None:
+            self.admission.on_group_join(name, lam)
         return spec
 
     def leave(self, name: str):
         if self.scheduler.partitioner is not None:
             self.scheduler.partitioner.remove_group(name)
+        if self.admission is not None:
+            self.admission.on_group_leave(name)

@@ -19,8 +19,10 @@ import numpy as np
 
 from repro.configs.base import LMConfig
 from repro.core import (ChunkRecord, DeviceKind, DynamicScheduler, GroupSpec,
-                        JaxChunkExecutor)
+                        JaxChunkExecutor, OverheadLedger, ThroughputTracker)
 from repro.models import model as M
+from repro.queue import (AdmissionController, Job, JobService, JournalStore,
+                         QueueManager, percentiles)
 from repro.train.trainer import GroupDef, bucket
 
 
@@ -32,6 +34,24 @@ class ServeReport:
     per_group_items: Dict[str, int]
     overheads: Dict[str, Dict[str, float]]
     throughput: Dict[str, float]
+
+
+@dataclass
+class QueueServeReport:
+    """Result of the queued-submission path (serve_jobs)."""
+    jobs: int
+    done: int
+    failed: int
+    cancelled: int
+    requeues: int
+    batches: int
+    new_tokens: int
+    time_s: float
+    queue_delay: Dict[str, float]          # p50/p95/p99 seconds
+    per_group_items: Dict[str, int]
+    throughput: Dict[str, float]
+    dead_groups: List[str] = field(default_factory=list)
+    drained: bool = True
 
 
 class HeteroServeEngine:
@@ -48,6 +68,9 @@ class HeteroServeEngine:
         self.alpha = alpha
         self.params = M.init_params(cfg, jax.random.PRNGKey(seed))
         self._fns: Dict[int, tuple] = {}
+        # fail-injection counters persist across per-batch executors so an
+        # injected group death stays dead over a queued multi-batch run
+        self._fail_counters: Dict[str, Dict[str, int]] = {}
 
     # ------------------------------------------------------------------
     def _fns_for(self, b: int):
@@ -92,7 +115,14 @@ class HeteroServeEngine:
                     * 0.02
             return out
 
+        counter = self._fail_counters.setdefault(g.name, {"n": 0})
+
         def step(batch):
+            if g.fail_after_chunks is not None:
+                counter["n"] += 1
+                if counter["n"] > g.fail_after_chunks:
+                    from repro.core.dispatch import ChunkFailure
+                    raise ChunkFailure(f"group {g.name} injected failure")
             b = batch["tokens"].shape[0]
             prefill_fn, decode_fn = self._fns_for(b)
             if g.slowdown > 1.0:
@@ -116,15 +146,23 @@ class HeteroServeEngine:
                                 priority_boost=g.priority_boost)
 
     # ------------------------------------------------------------------
-    def serve(self, n_requests: int) -> ServeReport:
+    def _build_scheduler(self, max_chunk: Optional[int] = None,
+                         exclude: Optional[set] = None) -> DynamicScheduler:
         specs, execs = {}, {}
         for g in self.groups:
+            if exclude and g.name in exclude:
+                continue
             specs[g.name] = GroupSpec(g.name, g.kind,
                                       fixed_chunk=g.fixed_chunk,
-                                      min_chunk=1, max_chunk=n_requests,
+                                      min_chunk=1, max_chunk=max_chunk,
                                       init_throughput=1.0)
             execs[g.name] = self._make_executor(g)
-        sched = DynamicScheduler(specs, execs, alpha=self.alpha)
+        if not specs:
+            raise RuntimeError("no live device groups")
+        return DynamicScheduler(specs, execs, alpha=self.alpha)
+
+    def serve(self, n_requests: int) -> ServeReport:
+        sched = self._build_scheduler(max_chunk=n_requests)
         res = sched.run(0, n_requests)
         return ServeReport(
             requests=res.iterations,
@@ -133,3 +171,63 @@ class HeteroServeEngine:
             per_group_items=res.per_group_items,
             overheads=res.overheads,
             throughput=res.throughput)
+
+    # ------------------------------------------------------------------
+    # queued-submission path: requests arrive as prioritized Jobs, pass
+    # admission control, and are drained batch-wise by a JobService.
+    # ------------------------------------------------------------------
+    def serve_jobs(self, jobs: List[Job],
+                   slo_delay_s: Optional[float] = None,
+                   batch_jobs: int = 8,
+                   journal_path: Optional[str] = None,
+                   timeout_s: float = 300.0) -> QueueServeReport:
+        """Serve prioritized jobs through admission control + queue.
+
+        λ-estimates and overhead fractions are shared across the per-batch
+        scheduler runs (one ThroughputTracker / OverheadLedger for the
+        whole session), so admission's capacity model and the partitioner
+        both warm up once and stay warm. ``slo_delay_s=None`` disables the
+        admission gate (every job is queued). Groups that die mid-run are
+        excluded from subsequent batches.
+        """
+        tracker = ThroughputTracker(self.alpha)
+        ledger = OverheadLedger()
+        ledger.keep_records = False           # bounded memory for long runs
+        dead: set = set()
+
+        def make_scheduler() -> DynamicScheduler:
+            sched = self._build_scheduler(exclude=dead)
+            sched.tracker = tracker           # shared across batches
+            sched.ledger = ledger
+            return sched
+
+        queue = QueueManager()
+        admission = None
+        if slo_delay_s is not None:
+            admission = AdmissionController(queue, tracker, ledger,
+                                            slo_delay_s=slo_delay_s)
+            for g in self.groups:
+                admission.on_group_join(g.name, 1.0)
+        journal = JournalStore(journal_path) if journal_path else None
+        service = JobService(make_scheduler, queue=queue,
+                             admission=admission, journal=journal,
+                             batch_jobs=batch_jobs,
+                             on_group_failed=dead.add)
+        t0 = time.monotonic()
+        for job in jobs:
+            service.submit(job)
+        drained = service.run_until_idle(timeout_s=timeout_s)
+        dt = time.monotonic() - t0
+        if journal is not None:
+            journal.close()
+        st = service.stats
+        cancelled = sum(1 for j in jobs if j.state.value == "cancelled")
+        done_items = sum(j.items for j in jobs if j.state.value == "done")
+        return QueueServeReport(
+            jobs=len(jobs), done=st.done, failed=st.failed,
+            cancelled=cancelled, requeues=st.requeues, batches=st.batches,
+            new_tokens=done_items * self.decode_tokens, time_s=dt,
+            queue_delay=percentiles(st.queue_delays),
+            per_group_items=dict(st.per_group_items),
+            throughput=tracker.snapshot(), dead_groups=sorted(dead),
+            drained=drained)

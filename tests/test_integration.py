@@ -11,6 +11,8 @@ from repro.serve.engine import HeteroServeEngine
 from repro.train.optimizer import OptConfig
 from repro.train.trainer import GroupDef, HeteroTrainer
 
+pytestmark = pytest.mark.slow
+
 
 @pytest.fixture(scope="module")
 def tiny_cfg():

@@ -11,6 +11,8 @@ from repro.models import model as M
 from repro.models.attention import (chunked_attention, decode_attention,
                                     group_query_heads, reference_attention)
 
+pytestmark = pytest.mark.slow
+
 KEY = jax.random.PRNGKey(7)
 
 

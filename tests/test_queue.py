@@ -1,0 +1,342 @@
+"""Unit tests for repro.queue: state machine legality, heap ordering with
+requeue, admission backpressure under synthetic overload, journal
+crash-recovery replay, and the JobService drain loop."""
+import json
+import os
+
+import pytest
+
+from repro.core import DeviceKind, DynamicScheduler, GroupSpec, SleepExecutor
+from repro.queue import (AdmissionController, Decision, IllegalTransition,
+                         Job, JobService, JobState, JournalStore,
+                         QueueManager, percentiles)
+from repro.core.throughput import ThroughputTracker
+from repro.runtime.elastic import ElasticController
+
+
+# ---------------------------------------------------------------------------
+# Job state machine
+# ---------------------------------------------------------------------------
+
+def test_legal_lifecycle_stamps_timestamps():
+    j = Job(items=4)
+    assert j.state == JobState.PENDING and j.queue_delay is None
+    j.transition(JobState.ADMITTED)
+    assert j.admitted_at is not None
+    j.transition(JobState.RUNNING)
+    assert j.started_at is not None and j.attempts == 1
+    assert j.queue_delay is not None and j.queue_delay >= 0.0
+    j.transition(JobState.DONE)
+    assert j.terminal and j.finished_at is not None
+
+
+@pytest.mark.parametrize("start,bad", [
+    (JobState.PENDING, JobState.RUNNING),
+    (JobState.PENDING, JobState.DONE),
+    (JobState.ADMITTED, JobState.DONE),
+    (JobState.ADMITTED, JobState.REQUEUED),
+    (JobState.RUNNING, JobState.ADMITTED),
+    (JobState.REQUEUED, JobState.RUNNING),
+    (JobState.REQUEUED, JobState.DONE),
+    (JobState.DONE, JobState.RUNNING),
+    (JobState.FAILED, JobState.ADMITTED),
+    (JobState.CANCELLED, JobState.PENDING),
+])
+def test_illegal_transitions_raise(start, bad):
+    j = Job()
+    j.state = start
+    with pytest.raises(IllegalTransition):
+        j.transition(bad)
+    assert j.state == start        # unchanged on failure
+
+
+def test_requeue_cycle_counts_attempts():
+    j = Job(max_attempts=3)
+    for expect in (1, 2, 3):
+        j.transition(JobState.ADMITTED)
+        j.transition(JobState.RUNNING)
+        assert j.attempts == expect
+        if expect < 3:
+            j.transition(JobState.REQUEUED)
+    assert j.attempts_left == 0
+    j.transition(JobState.DONE)
+
+
+def test_job_json_round_trip():
+    j = Job(items=7, priority=2, tenant="t1", meta={"k": 1})
+    j.transition(JobState.ADMITTED)
+    back = Job.from_json(j.to_json())
+    assert back.job_id == j.job_id and back.state == JobState.ADMITTED
+    assert back.items == 7 and back.priority == 2 and back.meta == {"k": 1}
+    assert back.admitted_at == j.admitted_at
+
+
+def test_invalid_items_rejected():
+    with pytest.raises(ValueError):
+        Job(items=0)
+
+
+# ---------------------------------------------------------------------------
+# QueueManager heap
+# ---------------------------------------------------------------------------
+
+def test_priority_order_with_fifo_ties():
+    q = QueueManager()
+    lo1, hi, lo2 = Job(priority=5), Job(priority=0), Job(priority=5)
+    for j in (lo1, hi, lo2):
+        q.put(j)
+    assert q.pop() is hi
+    assert q.pop() is lo1          # FIFO among equal priorities
+    assert q.pop() is lo2
+    assert q.pop() is None
+
+
+def test_requeue_goes_behind_equal_priority_work():
+    q = QueueManager()
+    a, b = Job(priority=1), Job(priority=1)
+    q.put(a)
+    q.mark_running(q.pop(), "g0")
+    q.put(b)                                   # admitted while a runs
+    q.mark_finished(a, JobState.REQUEUED)
+    q.requeue(a)
+    assert q.pop() is b and q.pop() is a       # a re-enters behind b
+    # but higher priority still preempts older queued work
+    urgent = Job(priority=0)
+    q.mark_running(b, "g0")
+    q.mark_finished(b, JobState.REQUEUED)
+    q.requeue(b)
+    q.put(urgent)
+    assert q.pop() is urgent
+
+
+def test_cancel_is_lazy_and_skipped_at_pop():
+    q = QueueManager()
+    a, b = Job(priority=0), Job(priority=1)
+    q.put(a), q.put(b)
+    assert q.cancel(a.job_id)
+    assert not q.cancel(a.job_id)              # already cancelled
+    assert a.state == JobState.CANCELLED
+    assert q.pop() is b                        # b stays ADMITTED until
+    assert q.pop() is None                     # mark_running binds it
+
+
+def test_backlog_and_inflight_accounting():
+    q = QueueManager()
+    jobs = [Job(items=10), Job(items=20), Job(items=30)]
+    for j in jobs:
+        q.put(j)
+    assert q.backlog_items() == 60 and q.depth() == 3
+    j = q.pop()
+    q.mark_running(j, "accel")
+    assert q.backlog_items() == 50 and q.inflight("accel") == 1
+    q.mark_finished(j, JobState.DONE)
+    assert q.inflight() == 0
+    assert q.counts()["done"] == 1 and q.counts()["admitted"] == 2
+
+
+# ---------------------------------------------------------------------------
+# Admission backpressure
+# ---------------------------------------------------------------------------
+
+def _controller(lam=100.0, slo=1.0):
+    q = QueueManager()
+    adm = AdmissionController(q, slo_delay_s=slo, defer_factor=4.0)
+    adm.on_group_join("g0", lam)
+    return q, adm
+
+
+def test_admit_defer_reject_bands():
+    q, adm = _controller(lam=100.0, slo=1.0)       # capacity 100 items/s
+    assert adm.admit(Job(items=50)).decision == Decision.ADMIT
+    # backlog 50 + 60 = 110 -> 1.1s > SLO, < 4×SLO
+    d = adm.admit(Job(items=60))
+    assert d.decision == Decision.DEFER and d.projected_delay_s > 1.0
+    # a monster job lands beyond 4×SLO and is shed
+    big = Job(items=1000)
+    assert adm.admit(big).decision == Decision.REJECT
+    assert big.state == JobState.CANCELLED
+    assert "rejected_delay_s" in big.meta
+    assert (adm.admitted, adm.deferred, adm.rejected) == (1, 1, 1)
+
+
+def test_backpressure_bounds_queue_under_overload():
+    q, adm = _controller(lam=10.0, slo=1.0)        # capacity 10 items/s
+    decisions = [adm.admit(Job(items=5)) for _ in range(100)]
+    admitted = sum(d.decision == Decision.ADMIT for d in decisions)
+    # projected delay caps the backlog at slo×capacity items
+    assert q.backlog_items() <= 10
+    assert admitted == 2
+    # with the backlog pinned at the SLO bound, the rest sit in the defer
+    # band (retryable), none sneak into the queue
+    assert sum(d.decision == Decision.DEFER for d in decisions) == 98
+    # a job too large for even the defer band is shed outright
+    assert adm.admit(Job(items=500)).decision == Decision.REJECT
+
+
+def test_capacity_follows_group_leave_and_tracker():
+    q = QueueManager()
+    tr = ThroughputTracker()
+    adm = AdmissionController(q, tracker=tr, slo_delay_s=1.0)
+    adm.on_group_join("g0", 100.0)
+    adm.on_group_join("g1", 100.0)
+    tr.seed("g0", 100.0), tr.seed("g1", 100.0)
+    assert adm.capacity_items_s() == pytest.approx(200.0)
+    adm.on_group_leave("g1")
+    assert adm.capacity_items_s() == pytest.approx(100.0)
+
+
+def test_elastic_controller_notifies_admission():
+    groups = {"g0": GroupSpec("g0", DeviceKind.BIG, init_throughput=50.0)}
+    execs = {"g0": SleepExecutor(rate=50.0)}
+    sched = DynamicScheduler(groups, execs)
+    q = QueueManager()
+    adm = AdmissionController(q, slo_delay_s=1.0)
+    adm.on_group_join("g0", 50.0)
+    ec = ElasticController(sched, admission=adm)
+    ec.join("g1", DeviceKind.BIG, SleepExecutor(rate=50.0))
+    assert "g1" in adm.groups()
+    ec.leave("g1")
+    assert "g1" not in adm.groups()
+
+
+# ---------------------------------------------------------------------------
+# Journal replay / crash recovery
+# ---------------------------------------------------------------------------
+
+def test_journal_replay_last_write_wins(tmp_path):
+    path = str(tmp_path / "journal.jsonl")
+    a, b = Job(items=1), Job(items=2)
+    with JournalStore(path) as js:
+        js.record(a, "submitted")
+        a.transition(JobState.ADMITTED); js.record(a)
+        a.transition(JobState.RUNNING); js.record(a)
+        a.transition(JobState.DONE); js.record(a)
+        b.transition(JobState.ADMITTED); js.record(b)
+    final = JournalStore.replay(path)
+    assert final[a.job_id].state == JobState.DONE
+    assert final[b.job_id].state == JobState.ADMITTED
+
+
+def test_journal_tolerates_torn_tail(tmp_path):
+    path = str(tmp_path / "journal.jsonl")
+    a = Job()
+    with JournalStore(path) as js:
+        a.transition(JobState.ADMITTED); js.record(a)
+    with open(path, "a") as fh:                  # crash mid-write
+        fh.write('{"ts": 1.0, "event": "running", "job": {"job_id"')
+    final = JournalStore.replay(path)
+    assert final[a.job_id].state == JobState.ADMITTED
+
+
+def test_recover_requeues_inflight_jobs(tmp_path):
+    path = str(tmp_path / "journal.jsonl")
+    running, queued, done = Job(), Job(), Job()
+    with JournalStore(path) as js:
+        for j in (running, queued, done):
+            j.transition(JobState.ADMITTED); js.record(j)
+        running.transition(JobState.RUNNING); js.record(running)
+        done.transition(JobState.RUNNING)
+        done.transition(JobState.DONE); js.record(done)
+    to_requeue, final = JournalStore.recover(path)
+    ids = {j.job_id for j in to_requeue}
+    assert ids == {running.job_id, queued.job_id}
+    states = {j.job_id: j.state for j in to_requeue}
+    assert states[running.job_id] == JobState.REQUEUED
+    assert states[queued.job_id] == JobState.ADMITTED
+    assert final[done.job_id].state == JobState.DONE
+    # recovered jobs slot straight back into a queue
+    q = QueueManager()
+    for j in to_requeue:
+        if j.state == JobState.REQUEUED:
+            q.requeue(j)
+        else:
+            q.put(j)
+    assert q.depth() == 2
+
+
+# ---------------------------------------------------------------------------
+# JobService drain loop (SleepExecutor-backed scheduler)
+# ---------------------------------------------------------------------------
+
+def _make_sched():
+    groups = {
+        "accel": GroupSpec("accel", DeviceKind.ACCEL, fixed_chunk=64,
+                           init_throughput=50_000),
+        "cpu0": GroupSpec("cpu0", DeviceKind.BIG, init_throughput=10_000),
+    }
+    execs = {"accel": SleepExecutor(rate=50_000),
+             "cpu0": SleepExecutor(rate=10_000)}
+    return DynamicScheduler(groups, execs)
+
+
+def test_service_drains_all_jobs(tmp_path):
+    path = str(tmp_path / "journal.jsonl")
+    svc = JobService(_make_sched, journal=JournalStore(path), batch_jobs=4)
+    jobs = [Job(items=32, priority=i % 3) for i in range(12)]
+    for j in jobs:
+        svc.submit(j)
+    assert svc.run_until_idle(timeout_s=30)
+    assert all(j.state == JobState.DONE for j in jobs)
+    assert svc.stats.done == 12 and svc.stats.failed == 0
+    assert sum(svc.stats.per_group_items.values()) >= 12 * 32
+    final = JournalStore.replay(path)
+    assert all(final[j.job_id].state == JobState.DONE for j in jobs)
+
+
+def test_service_requeues_after_total_run_failure():
+    calls = {"n": 0}
+
+    def flaky_sched():
+        calls["n"] += 1
+        if calls["n"] == 1:        # every group dies on its first chunk
+            groups = {"g0": GroupSpec("g0", DeviceKind.BIG,
+                                      init_throughput=1000)}
+            execs = {"g0": SleepExecutor(rate=1000, fail_after=0)}
+            return DynamicScheduler(groups, execs)
+        return _make_sched()
+
+    svc = JobService(flaky_sched, batch_jobs=8)
+    jobs = [Job(items=16) for _ in range(4)]
+    for j in jobs:
+        svc.submit(j)
+    assert svc.run_until_idle(timeout_s=30)
+    assert all(j.state == JobState.DONE for j in jobs)
+    assert svc.stats.requeues >= 1
+    assert all(j.attempts >= 2 for j in jobs)
+
+
+def test_service_fails_job_when_attempts_exhausted():
+    def dead_sched():
+        groups = {"g0": GroupSpec("g0", DeviceKind.BIG,
+                                  init_throughput=1000)}
+        execs = {"g0": SleepExecutor(rate=1000, fail_after=0)}
+        return DynamicScheduler(groups, execs)
+
+    svc = JobService(dead_sched, batch_jobs=2)
+    job = Job(items=8, max_attempts=2)
+    svc.submit(job)
+    assert svc.run_until_idle(timeout_s=30)
+    assert job.state == JobState.FAILED
+    assert job.attempts == 2
+
+
+def test_deferred_jobs_admitted_as_backlog_drains():
+    q = QueueManager()
+    adm = AdmissionController(q, slo_delay_s=1.0, defer_factor=50.0)
+    adm.on_group_join("accel", 50_000)
+    adm.on_group_join("cpu0", 10_000)
+    svc = JobService(_make_sched, queue=q, admission=adm, batch_jobs=4)
+    # 60k-item SLO budget; 40k-item jobs: first admits, second defers
+    jobs = [Job(items=40_000) for _ in range(2)]
+    decisions = [svc.submit(j) for j in jobs]
+    assert decisions[0].decision == Decision.ADMIT
+    assert decisions[1].decision == Decision.DEFER
+    assert svc.run_until_idle(timeout_s=60)
+    assert all(j.state == JobState.DONE for j in jobs)
+
+
+def test_percentiles_nearest_rank():
+    xs = list(range(1, 101))
+    p = percentiles(xs)
+    assert p["p50"] == 50 and p["p95"] == 95 and p["p99"] == 99
+    assert percentiles([]) == {"p50": 0.0, "p95": 0.0, "p99": 0.0}

@@ -9,6 +9,8 @@ from repro.configs.registry import list_archs, get_reduced_config
 from repro.models import model as M
 from repro.train.train_step import loss_fn
 
+pytestmark = pytest.mark.slow
+
 KEY = jax.random.PRNGKey(0)
 
 
