@@ -1,0 +1,185 @@
+"""Batch-boundary overhead: rebuild-per-batch vs. persistent runtime.
+
+The paper shaves per-offload host overheads (O_td, thread wake-ups); the
+serving path used to re-pay a much larger version at every *batch*
+boundary — a fresh DynamicScheduler, fresh executors, and a full set of
+dispatcher threads spawned and joined per batch, with a global barrier in
+between. This benchmark measures that cost directly on deterministic
+SleepExecutors (so the numbers characterize the runtime layer, not model
+compute):
+
+  * setup_ms   — scheduler construction + thread spawn until the first
+                 token is handed out (per batch)
+  * gap_ms     — inter-batch idle gap: time between batch k's last chunk
+                 completion and batch k+1's first token (clamped at 0;
+                 with the double-buffered drain epochs overlap and the
+                 gap vanishes)
+  * p95 queue delay at the same offered load (0.9 of aggregate capacity),
+    rebuild-per-batch vs. persistent JobService — the headline number
+
+Run:  PYTHONPATH=src python -m benchmarks.run            (all benchmarks)
+      PYTHONPATH=src python -m benchmarks.batch_boundary
+"""
+from __future__ import annotations
+
+import sys
+import time
+from pathlib import Path
+from typing import Dict, List, Tuple
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.core import (DeviceKind, DynamicScheduler, GroupSpec,
+                        SleepExecutor)
+from repro.queue import AdmissionController, Job, JobService, QueueManager
+
+clock = time.monotonic
+
+ACCEL_RATE = 20_000.0
+CPU_RATE = 5_000.0
+BATCHES = 8
+BATCH_ITEMS = 2_000                   # ≈ 80 ms of aggregate capacity
+JOB_ITEMS = 250
+SLO_DELAY_S = 0.5
+WINDOW_S = 1.2
+LOAD = 0.9
+
+
+def _specs() -> Dict[str, GroupSpec]:
+    return {
+        "accel": GroupSpec("accel", DeviceKind.ACCEL, fixed_chunk=512,
+                           init_throughput=ACCEL_RATE),
+        "cpu0": GroupSpec("cpu0", DeviceKind.BIG, init_throughput=CPU_RATE,
+                          min_chunk=8),
+    }
+
+
+def _execs() -> Dict[str, SleepExecutor]:
+    return {"accel": SleepExecutor(rate=ACCEL_RATE),
+            "cpu0": SleepExecutor(rate=CPU_RATE)}
+
+
+def _make_scheduler() -> DynamicScheduler:
+    return DynamicScheduler(_specs(), _execs())
+
+
+def _span(res) -> Tuple[float, float]:
+    """(first token handed out, last chunk completed) of one batch."""
+    return (min(r.tc1 for r in res.records),
+            max(r.tc3 for r in res.records))
+
+
+def _boundary_rebuild() -> Tuple[List[float], List[float]]:
+    """Old design: fresh scheduler + threads per batch, joined in between."""
+    setups, gaps = [], []
+    prev_end = None
+    for _ in range(BATCHES):
+        t_sub = clock()
+        res = _make_scheduler().run(0, BATCH_ITEMS)
+        first, last = _span(res)
+        setups.append(first - t_sub)
+        if prev_end is not None:
+            gaps.append(max(first - prev_end, 0.0))
+        prev_end = last
+    return setups, gaps
+
+
+def _boundary_persistent() -> Tuple[List[float], List[float]]:
+    """Persistent runtime, double-buffered: epoch k+1 submitted while
+    epoch k is in flight, mirroring JobService's continuous drain. The
+    one-time runtime start cost is amortized over all batches (a queued
+    epoch's submit-to-first-token time is pipeline wait, not setup)."""
+    t_start = clock()
+    sched = _make_scheduler()
+    sched.start()
+    results = []
+    handles = []
+    try:
+        for _ in range(BATCHES):
+            handles.append(sched.submit_epoch((0, BATCH_ITEMS)))
+            if len(handles) - len(results) > 1:   # keep ≤ 2 in flight
+                results.append(handles[len(results)].result(timeout=30.0))
+        while len(results) < len(handles):
+            results.append(handles[len(results)].result(timeout=30.0))
+    finally:
+        sched.shutdown()
+    first0 = min(r.tc1 for r in results[0].records)
+    setups = [(first0 - t_start) / BATCHES] * BATCHES   # amortized
+    gaps = []
+    prev_end = None
+    for res in results:
+        first, last = _span(res)
+        if prev_end is not None:
+            gaps.append(max(first - prev_end, 0.0))
+        prev_end = last
+    return setups, gaps
+
+
+def _queue_delay(persistent: bool) -> Tuple[Dict[str, float], int, int]:
+    """p95 queue delay at offered load LOAD, one drain mode."""
+    capacity = ACCEL_RATE + CPU_RATE
+    jobs_per_s = LOAD * capacity / JOB_ITEMS
+    n_jobs = max(1, int(jobs_per_s * WINDOW_S))
+    gap = 1.0 / jobs_per_s
+
+    queue = QueueManager()
+    admission = AdmissionController(queue, slo_delay_s=SLO_DELAY_S)
+    admission.on_group_join("accel", ACCEL_RATE)
+    admission.on_group_join("cpu0", CPU_RATE)
+    service = JobService(_make_scheduler, queue=queue, admission=admission,
+                         batch_jobs=8, poll_s=0.002,
+                         persistent=persistent,
+                         pipeline_depth=2 if persistent else 1)
+    service.start()
+    jobs = []
+    try:
+        for i in range(n_jobs):
+            job = Job(items=JOB_ITEMS, priority=i % 3)
+            jobs.append(job)
+            service.submit(job)
+            time.sleep(gap)
+        service.retry_deferred()
+        deadline = clock() + 30.0
+        while clock() < deadline:
+            if queue.depth() == 0 and all(
+                    j.terminal for j in jobs if j.state.value != "pending"):
+                break
+            time.sleep(0.01)
+    finally:
+        service.close()
+    return (service.stats.delay_percentiles(), service.stats.done,
+            service.stats.overlapped_batches())
+
+
+def _ms(xs: List[float]) -> float:
+    return 1e3 * sum(xs) / max(len(xs), 1)
+
+
+def rows_batch_boundary():
+    out = []
+    for mode, fn in (("rebuild", _boundary_rebuild),
+                     ("persistent", _boundary_persistent)):
+        setups, gaps = fn()
+        derived = (f"setup_ms={_ms(setups):.3f};gap_ms={_ms(gaps):.3f};"
+                   f"batches={BATCHES};items={BATCH_ITEMS}")
+        # per-batch boundary overhead = setup + idle gap, in µs
+        us = 1e6 * (sum(setups) + sum(gaps)) / BATCHES
+        out.append((f"batch_boundary/{mode}", us, derived))
+    for mode, persistent in (("rebuild", False), ("persistent", True)):
+        pct, done, overlapped = _queue_delay(persistent)
+        derived = (f"p50={pct['p50'] * 1e3:.2f}ms;"
+                   f"p95={pct['p95'] * 1e3:.2f}ms;"
+                   f"p99={pct['p99'] * 1e3:.2f}ms;"
+                   f"done={done};overlapped={overlapped};load={LOAD:g}")
+        out.append((f"batch_boundary/queue_delay_{mode}",
+                    pct["p95"] * 1e6, derived))
+    return out
+
+
+ALL = [rows_batch_boundary]
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for name, us, derived in rows_batch_boundary():
+        print(f"{name},{us:.3f},{derived}")

@@ -72,7 +72,7 @@ def _run_load(load: float):
                 break
             time.sleep(0.01)
     finally:
-        service.stop()
+        service.close()                   # stop daemon + runtime teardown
     return jobs, service, admission
 
 

@@ -1,14 +1,20 @@
 """Benchmark harness: one function per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV.  The simulator figures are exact
-reproductions of the paper's experiment grid (calibration in
-repro/core/platforms.py); `realexec/` rows exercise the actual threaded
-scheduler runtime on this host.
+Prints ``name,us_per_call,derived`` CSV; ``--json out.json`` additionally
+emits machine-readable results (a list of {name, us_per_call, derived}
+objects) so benchmark trajectories can be tracked across commits. The
+simulator figures are exact reproductions of the paper's experiment grid
+(calibration in repro/core/platforms.py); `realexec/` rows exercise the
+actual threaded scheduler runtime on this host; `batch_boundary/` rows
+compare the rebuild-per-batch and persistent-runtime serving drains.
 
-Run:  PYTHONPATH=src python -m benchmarks.run
+Run:  PYTHONPATH=src python -m benchmarks.run [--json out.json]
+                                              [--only batch_boundary]
 """
 from __future__ import annotations
 
+import argparse
+import json
 import sys
 from pathlib import Path
 
@@ -17,12 +23,36 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write results as JSON to PATH")
+    ap.add_argument("--only", default=None, metavar="SUBSTR",
+                    help="run only benchmark suites whose function name "
+                         "contains SUBSTR (e.g. batch_boundary, "
+                         "queue_saturation, fig7, realexec)")
+    args = ap.parse_args()
+
+    from benchmarks.batch_boundary import ALL as BOUNDARY
     from benchmarks.paper_figures import ALL as PAPER
     from benchmarks.queue_saturation import ALL as QUEUE
+
+    suites = [fn for fn in PAPER + QUEUE + BOUNDARY
+              if not args.only or args.only in fn.__name__]
+    if args.only and not suites:
+        names = ", ".join(fn.__name__ for fn in PAPER + QUEUE + BOUNDARY)
+        ap.error(f"--only {args.only!r} matches no suite; available: "
+                 f"{names}")
+    rows = []
     print("name,us_per_call,derived")
-    for fn in PAPER + QUEUE:
+    for fn in suites:
         for name, us, derived in fn():
             print(f"{name},{us:.3f},{derived}")
+            rows.append({"name": name, "us_per_call": round(us, 3),
+                         "derived": derived})
+    if args.json:
+        with open(args.json, "w", encoding="utf-8") as fh:
+            json.dump(rows, fh, indent=2)
+            fh.write("\n")
 
 
 if __name__ == "__main__":

@@ -1,6 +1,13 @@
 #!/usr/bin/env bash
-# Fast contributor signal (<60s): everything except the slow-marked
-# integration / model-compile tests. Full suite: `python -m pytest -q`.
+# Fast contributor signal (<60s).
+# Stage 1 fails fast on the scheduler/queue core (the fast unit tests for
+# the persistent runtime, partitioner, and queue subsystem); stage 2 runs
+# everything else except the slow-marked integration / model-compile
+# tests. Full suite: `python -m pytest -q`.
 set -euo pipefail
 cd "$(dirname "$0")/.."
-exec python -m pytest -q -m "not slow" "$@"
+python -m pytest -q -x -m "not slow" \
+  tests/test_scheduler.py tests/test_partitioner.py tests/test_queue.py
+exec python -m pytest -q -m "not slow" \
+  --ignore=tests/test_scheduler.py --ignore=tests/test_partitioner.py \
+  --ignore=tests/test_queue.py "$@"

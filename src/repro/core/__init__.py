@@ -12,7 +12,8 @@ from repro.core.overheads import OverheadLedger, OverheadTotals
 from repro.core.dispatch import (CallableExecutor, ChunkExecutor,
                                  ChunkFailure, JaxChunkExecutor,
                                  SleepExecutor, try_boost_priority)
-from repro.core.scheduler import DynamicScheduler, ScheduleResult
+from repro.core.scheduler import DynamicScheduler, EpochHandle, \
+    ScheduleResult
 from repro.core.energy import EnergyModel, EnergyReport, PowerSpec
 from repro.core.oracle import BulkScheduler, BulkResult
 from repro.core.platforms import IVY, HASWELL, EXYNOS, PLATFORMS, Platform
@@ -25,7 +26,8 @@ __all__ = [
     "SearchTrace", "occupancy_seed", "search_chunk", "OverheadLedger",
     "OverheadTotals", "CallableExecutor", "ChunkExecutor", "ChunkFailure",
     "JaxChunkExecutor", "SleepExecutor", "try_boost_priority",
-    "DynamicScheduler", "ScheduleResult", "EnergyModel", "EnergyReport",
+    "DynamicScheduler", "EpochHandle", "ScheduleResult", "EnergyModel",
+    "EnergyReport",
     "PowerSpec", "BulkScheduler", "BulkResult", "IVY", "HASWELL", "EXYNOS",
     "PLATFORMS", "Platform", "SimConfig", "SimResult", "simulate",
     "run_config", "bulk_oracle",

@@ -23,7 +23,7 @@ import time
 from dataclasses import dataclass
 from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
 
-from repro.core.types import ChunkRecord, Token
+from repro.core.types import Chunk, ChunkRecord, Token
 
 clock = time.monotonic
 
@@ -44,7 +44,14 @@ def try_boost_priority(delta: int = -10) -> bool:
 
 class ChunkExecutor:
     """Interface. execute() may complete earlier in-flight work; drain()
-    flushes the pipeline at end-of-stream."""
+    flushes the pipeline at end-of-epoch.
+
+    Executors are *reused across epochs* on the persistent scheduler
+    runtime: on_worker_start() fires once per dispatcher thread (runtime
+    lifetime), while drain() has per-epoch semantics — the dispatcher calls
+    it when an epoch's space is exhausted so no in-flight work crosses an
+    epoch boundary. abort() discards the pipeline after a group death and
+    returns the abandoned chunks so the caller can requeue them."""
 
     def on_worker_start(self) -> None:
         pass
@@ -53,6 +60,16 @@ class ChunkExecutor:
         raise NotImplementedError
 
     def drain(self) -> List[ChunkRecord]:
+        return []
+
+    def abort(self) -> List[Chunk]:
+        """Drop any in-flight work; returns the chunks to requeue."""
+        return []
+
+    def completed(self) -> List[ChunkRecord]:
+        """Records that finished but were not yet returned when a failure
+        interrupted execute()/drain(); the dispatcher collects them on the
+        failure path so finished work is not discarded with the group."""
         return []
 
 
@@ -100,6 +117,8 @@ class JaxChunkExecutor(ChunkExecutor):
         self.priority_boost = priority_boost
         self.boosted = False
         self._inflight: Deque[Tuple[ChunkRecord, Any]] = collections.deque()
+        self._lost_chunks: List[Chunk] = []       # popped, then failed
+        self._pending_done: List[ChunkRecord] = []  # done, not yet returned
 
     def on_worker_start(self) -> None:
         if self.priority_boost:
@@ -107,59 +126,101 @@ class JaxChunkExecutor(ChunkExecutor):
 
     def _complete_oldest(self) -> ChunkRecord:
         rec, outs = self._inflight.popleft()
-        self.jax.block_until_ready(outs)
-        rec.tg4 = clock()
-        res = self.fetch(outs)
-        rec.tg5 = clock()
+        try:
+            self.jax.block_until_ready(outs)
+            rec.tg4 = clock()
+            res = self.fetch(outs)
+            rec.tg5 = clock()
+        except BaseException:
+            # the popped chunk is in neither _inflight nor the caller's
+            # hands — remember it so abort() can hand it back for requeue
+            self._lost_chunks.append(rec.token.chunk)
+            raise
+        # Tc3 (host resumed after completion) is stamped here, per record:
+        # with async_depth ≥ 2 several records drain in one call, and a
+        # single batch-level stamp would inflate O_td for all but the last
+        rec.tc3 = clock()
         if res is not None:
             rec.meta["result"] = res
         return rec
 
     def execute(self, token: Token, rec: ChunkRecord) -> List[ChunkRecord]:
-        done: List[ChunkRecord] = []
-        while len(self._inflight) >= self.async_depth:
-            done.append(self._complete_oldest())
-        host_inputs = self.make_inputs(token)
-        rec.tg1 = clock()
-        dev_inputs = self.jax.device_put(host_inputs, self.device) \
-            if self.device is not None else self.jax.device_put(host_inputs)
-        rec.tg2 = clock()
-        outs = self.step(*dev_inputs) if isinstance(dev_inputs, tuple) \
-            else self.step(dev_inputs)
-        rec.tg3 = clock()                       # dispatch returned (async)
-        self._inflight.append((rec, outs))
-        if self.async_depth == 1:
-            done.append(self._complete_oldest())
+        done: List[ChunkRecord] = self._pending_done
+        self._pending_done = []
+        try:
+            while len(self._inflight) >= self.async_depth:
+                done.append(self._complete_oldest())
+            host_inputs = self.make_inputs(token)
+            rec.tg1 = clock()
+            dev_inputs = self.jax.device_put(host_inputs, self.device) \
+                if self.device is not None \
+                else self.jax.device_put(host_inputs)
+            rec.tg2 = clock()
+            outs = self.step(*dev_inputs) if isinstance(dev_inputs, tuple) \
+                else self.step(dev_inputs)
+            rec.tg3 = clock()                   # dispatch returned (async)
+            self._inflight.append((rec, outs))
+            if self.async_depth == 1:
+                done.append(self._complete_oldest())
+        except BaseException:
+            # a failure anywhere (completion OR launch of the new chunk)
+            # must not discard records that already finished in this call
+            self._pending_done = done
+            raise
         return done
 
     def drain(self) -> List[ChunkRecord]:
-        out = []
-        while self._inflight:
-            out.append(self._complete_oldest())
+        out = self._pending_done
+        self._pending_done = []
+        try:
+            while self._inflight:
+                out.append(self._complete_oldest())
+        except BaseException:
+            self._pending_done = out      # keep finished records visible
+            raise
         return out
+
+    def abort(self) -> List[Chunk]:
+        chunks = self._lost_chunks
+        chunks += [rec.token.chunk for rec, _ in self._inflight]
+        self._lost_chunks = []
+        self._inflight.clear()
+        return chunks
+
+    def completed(self) -> List[ChunkRecord]:
+        done, self._pending_done = self._pending_done, []
+        return done
 
 
 class SleepExecutor(ChunkExecutor):
     """Deterministic executor for scheduler unit tests: service time is
-    chunk.size / rate plus fixed per-phase overheads."""
+    chunk.size / rate plus fixed per-phase overheads. ``fail_after`` kills
+    the group after N chunks; ``slow_after`` divides the rate by
+    ``slow_factor`` after N chunks (a mid-run straggler)."""
 
     def __init__(self, rate: float, t_hd: float = 0.0, t_kl: float = 0.0,
-                 t_dh: float = 0.0, fail_after: Optional[int] = None):
+                 t_dh: float = 0.0, fail_after: Optional[int] = None,
+                 slow_after: Optional[int] = None, slow_factor: float = 10.0):
         self.rate = rate
         self.t_hd, self.t_kl, self.t_dh = t_hd, t_kl, t_dh
         self.fail_after = fail_after
+        self.slow_after = slow_after
+        self.slow_factor = slow_factor
         self._count = 0
 
     def execute(self, token: Token, rec: ChunkRecord) -> List[ChunkRecord]:
         self._count += 1
         if self.fail_after is not None and self._count > self.fail_after:
             raise ChunkFailure(f"group {token.group} died")
+        rate = self.rate
+        if self.slow_after is not None and self._count > self.slow_after:
+            rate = self.rate / self.slow_factor
         rec.tg1 = clock()
         time.sleep(self.t_hd)
         rec.tg2 = clock()
         time.sleep(self.t_kl)
         rec.tg3 = clock()
-        time.sleep(token.chunk.size / self.rate)
+        time.sleep(token.chunk.size / rate)
         rec.tg4 = clock()
         time.sleep(self.t_dh)
         rec.tg5 = clock()

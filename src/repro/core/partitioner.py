@@ -11,6 +11,14 @@ Policy (Navarro et al. heuristic, eqs. 3–4):
 The partitioner is work-conserving: it never hands out more iterations than
 remain, and the final chunks shrink to exhaust the space exactly (property-
 tested in tests/test_properties.py).
+
+The partitioner is *epoch-reusable*: one instance serves successive
+iteration spaces on the persistent scheduler runtime. Group membership
+(including groups removed by death or elastic leave), the accelerator
+reference, and — via the shared ThroughputTracker — the λ-EWMAs all carry
+across epochs; ``begin_epoch(space)`` swaps in the next space, and
+``next_token``/``requeue`` accept an explicit space so overlapping epochs
+(one group draining epoch N while another starts N+1) never mix ranges.
 """
 from __future__ import annotations
 
@@ -36,6 +44,13 @@ class HeterogeneousPartitioner:
         self._ref: Optional[GroupSpec] = accels[0] if accels else None
         for g in self.groups.values():
             tracker.seed(g.name, g.init_throughput)
+
+    # ------------------------------------------------------------------
+    def begin_epoch(self, space: IterationSpace) -> None:
+        """Epoch reset: install the next iteration space, keeping group
+        membership, the accel reference, and (tracker-held) λ state."""
+        with self._lock:
+            self.space = space
 
     # ------------------------------------------------------------------
     def add_group(self, spec: GroupSpec) -> None:
@@ -76,18 +91,21 @@ class HeterogeneousPartitioner:
             size = min(size, g.max_chunk)
         return size
 
-    def next_token(self, name: str) -> Optional[Token]:
-        """Filter₁ body for a device that just became idle."""
+    def next_token(self, name: str,
+                   space: Optional[IterationSpace] = None) -> Optional[Token]:
+        """Filter₁ body for a device that just became idle. ``space``
+        selects the epoch to draw from (defaults to the current one)."""
         with self._lock:
             if name not in self.groups:
                 return None
             g = self.groups[name]
-            chunk = self.space.take(self.chunk_size_for(name))
+            chunk = (space or self.space).take(self.chunk_size_for(name))
             if chunk is None:
                 return None
             return Token(chunk, g.name, g.kind)
 
-    def requeue(self, chunk: Chunk) -> None:
-        """Fault tolerance: a failed/lost chunk re-enters the space."""
+    def requeue(self, chunk: Chunk,
+                space: Optional[IterationSpace] = None) -> None:
+        """Fault tolerance: a failed/lost chunk re-enters its space."""
         with self._lock:
-            self.space.put_back(chunk)
+            (space or self.space).put_back(chunk)

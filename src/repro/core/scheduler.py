@@ -1,23 +1,46 @@
 """The Dynamic scheduler — the paper's §3.1 two-filter pipeline as a
-thread-per-device-group runtime.
+*persistent* thread-per-device-group runtime.
 
-Each device group gets a host (dispatcher) thread. The thread repeatedly:
+Each device group gets a long-lived host (dispatcher) thread. Threads block
+on an epoch queue and process successive IterationSpaces without teardown,
+so the per-batch cost the paper attributes to the host side (thread
+creation/wake-up, O_td, scheduler construction) is paid once per runtime,
+not once per batch:
+
+  start()                      spawn dispatcher threads once
+  submit_epoch(space) -> EpochHandle
+                               enqueue an iteration space; workers pick it
+                               up as soon as their previous epoch's space
+                               is exhausted (epochs overlap: a fast group
+                               starts epoch N+1 while a slow group is still
+                               draining epoch N — no global barrier)
+  shutdown()                   drain queued epochs, then join threads
+  run(begin, end)              one-shot compat wrapper (auto start; auto
+                               shutdown if this call started the runtime)
+
+Within an epoch each thread repeatedly runs the paper's pipeline:
   Filter₁: asks the partitioner for a token (device pick + chunk extraction),
            timestamped Tc1→Tc2;
   Filter₂: hands the token to the group's executor (which fills the device
            timestamps Tg1..Tg5), finalizes at Tc3, and feeds the throughput
            tracker and overhead ledger.
 
-Fault tolerance: a ChunkFailure re-queues the in-flight chunk and removes the
-group; remaining groups absorb the work (work conservation is property-
-tested). Elasticity: add_group() mid-run spawns a new dispatcher thread.
+λ-EWMAs (ThroughputTracker), the partitioner's group membership, and
+dead-group knowledge all live at runtime scope and carry across epochs.
+
+Fault tolerance: a ChunkFailure re-queues the in-flight chunk(s) and removes
+the group from the runtime (specs, executors, partitioner) — it stays
+excluded in later epochs; remaining groups absorb the work (work
+conservation is property-tested). Elasticity: add_group() mid-run spawns a
+new dispatcher thread that joins the oldest open epoch; remove_group()
+drains a group out everywhere.
 """
 from __future__ import annotations
 
+import collections
 import threading
-import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Deque, Dict, List, Optional, Tuple, Union
 
 from repro.core.dispatch import ChunkExecutor, ChunkFailure, clock
 from repro.core.overheads import OverheadLedger
@@ -44,6 +67,44 @@ class ScheduleResult:
         return busy
 
 
+class EpochHandle:
+    """Ticket for one submitted IterationSpace on the persistent runtime.
+
+    ``submitted_at`` / ``started_at`` (first token handed out) /
+    ``finished_at`` are monotonic-clock stamps; the gap between one epoch's
+    ``finished_at`` and the next epoch's ``started_at`` is the batch-boundary
+    overhead benchmarks/batch_boundary.py measures.
+    """
+
+    def __init__(self, index: int, space: IterationSpace):
+        self.index = index
+        self.space = space
+        self.submitted_at = clock()
+        self.started_at: Optional[float] = None
+        self.finished_at: Optional[float] = None
+        self.ledger = OverheadLedger()          # per-epoch §3.3 fractions
+        self.ledger.keep_records = False        # records live in _records
+        self._records: List[ChunkRecord] = []
+        self._failed: List[str] = []
+        self._event = threading.Event()
+        self._result: Optional[ScheduleResult] = None
+
+    @property
+    def finalized(self) -> bool:
+        return self._event.is_set()
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        return self._event.wait(timeout)
+
+    def result(self, timeout: Optional[float] = None) -> ScheduleResult:
+        if not self._event.wait(timeout):
+            raise TimeoutError(f"epoch {self.index} still in flight")
+        return self._result
+
+
 class DynamicScheduler:
     def __init__(self, groups: Dict[str, GroupSpec],
                  executors: Dict[str, ChunkExecutor],
@@ -54,25 +115,204 @@ class DynamicScheduler:
         self.alpha = alpha
         self.base_quantum = base_quantum
         self.tracker = ThroughputTracker(alpha)
-        self.ledger = OverheadLedger()
-        self._threads: Dict[str, threading.Thread] = {}
-        self._records: List[ChunkRecord] = []
-        self._rec_lock = threading.Lock()
-        self._failed: List[str] = []
+        self.ledger = OverheadLedger()          # cumulative, runtime lifetime
+        self.ledger.keep_records = False        # fractions only: a runtime-
+        # lifetime record list would grow without bound on a serve daemon
+        # (per-epoch records live in each ScheduleResult)
         self.partitioner: Optional[HeterogeneousPartitioner] = None
+        self._threads: Dict[str, threading.Thread] = {}
+        self._cv = threading.Condition()
+        # open (and recently finalized) epochs; finalized handles are
+        # pruned from the front once every worker is past them, so a
+        # long-lived daemon does not accumulate one handle per batch.
+        # _epoch_base is the absolute index of _epochs[0].
+        self._epochs: Deque[EpochHandle] = collections.deque()
+        self._epoch_base = 0
+        # name -> index of the next epoch the dispatcher will work on; an
+        # epoch E may finalize only once every live worker's position is
+        # past E (otherwise a thread that has not reached E yet could still
+        # absorb E's requeued work)
+        self._worker_pos: Dict[str, int] = {}
+        self._failed: List[str] = []
+        self._started = False
+        self._shutdown = False
 
-    # ------------------------------------------------------------------
-    def _worker(self, name: str):
-        ex = self.executors[name]
-        part = self.partitioner
+    # -- runtime lifecycle ---------------------------------------------
+    def start(self) -> None:
+        """Spawn the dispatcher threads (idempotent)."""
+        with self._cv:
+            if self._started:
+                return
+            self._started = True
+            # the partitioner is runtime-scoped: group membership, the
+            # accel reference, and (via the shared tracker) λ-EWMAs carry
+            # across epochs; each epoch swaps in a fresh space
+            self.partitioner = HeterogeneousPartitioner(
+                IterationSpace(0, 0), self.specs, self.tracker,
+                self.base_quantum)
+            for name in list(self.specs):
+                self._spawn_locked(name, 0)
+
+    def _spawn_locked(self, name: str, start_idx: int) -> None:
+        self._worker_pos[name] = start_idx
+        th = threading.Thread(target=self._worker, args=(name, start_idx),
+                              name=f"dispatch-{name}", daemon=True)
+        self._threads[name] = th
+        th.start()
+
+    def submit_epoch(self, space: Union[IterationSpace, Tuple[int, int]]) \
+            -> EpochHandle:
+        """Enqueue an iteration space for the dispatcher threads."""
+        if isinstance(space, tuple):
+            space = IterationSpace(*space)
+        self.start()
+        with self._cv:
+            if self._shutdown:
+                raise RuntimeError("scheduler runtime is shut down")
+            handle = EpochHandle(self._epoch_base + len(self._epochs), space)
+            self._epochs.append(handle)
+            self.partitioner.begin_epoch(space)
+            if not self._worker_pos:        # every group already dead
+                self._finalize_epoch_locked(handle)
+                self._prune_epochs_locked()
+            self._cv.notify_all()
+        return handle
+
+    def shutdown(self, wait: bool = True) -> None:
+        """Drain queued epochs, then stop and join dispatcher threads."""
+        with self._cv:
+            if not self._started:
+                return
+            self._shutdown = True
+            self._cv.notify_all()
+            threads = list(self._threads.values())
+        if wait:
+            for th in threads:
+                th.join(timeout=30.0)
+        with self._cv:
+            for h in self._epochs:          # workers died / none left
+                if not h.finalized:
+                    self._finalize_epoch_locked(h)
+
+    # -- introspection -------------------------------------------------
+    def dispatchers(self) -> Dict[str, threading.Thread]:
+        """Live view of the dispatcher threads (for reuse assertions)."""
+        with self._cv:
+            return dict(self._threads)
+
+    def live_groups(self) -> List[str]:
+        with self._cv:
+            return list(self.specs)
+
+    @property
+    def failed_groups(self) -> List[str]:
+        with self._cv:
+            return list(self._failed)
+
+    # -- compat one-shot API -------------------------------------------
+    def run(self, begin: int, end: int) -> ScheduleResult:
+        """One-shot wrapper: submit a single epoch and wait for it.
+
+        If this call started the runtime it also shuts it down, preserving
+        the pre-persistent contract (no threads outlive the call); on an
+        already-started runtime the threads are reused and stay up.
+        """
+        was_started = self._started
+        handle = self.submit_epoch(IterationSpace(begin, end))
+        res = handle.result()
+        if not was_started:
+            self.shutdown()
+        return res
+
+    # -- elasticity ----------------------------------------------------
+    def add_group(self, spec: GroupSpec, executor: ChunkExecutor) -> None:
+        """Elastic scale-up: the newcomer joins the oldest open epoch."""
+        with self._cv:
+            self.specs[spec.name] = spec
+            self.executors[spec.name] = executor
+            if not self._started or self._shutdown:
+                return
+            self.partitioner.add_group(spec)
+            start_idx = next((h.index for h in self._epochs
+                              if not h.finalized),
+                             self._epoch_base + len(self._epochs))
+            self._spawn_locked(spec.name, start_idx)
+            self._cv.notify_all()
+
+    def remove_group(self, name: str) -> None:
+        """Elastic leave: remove the group everywhere (specs, executors,
+        partitioner); its dispatcher thread drains and exits."""
+        with self._cv:
+            self.specs.pop(name, None)
+            self.executors.pop(name, None)
+            if self.partitioner is not None:
+                self.partitioner.remove_group(name)
+            self._cv.notify_all()
+
+    # -- dispatcher thread ---------------------------------------------
+    def _worker(self, name: str, start_idx: int) -> None:
+        ex = self.executors.get(name)
+        if ex is None:                      # removed before first epoch
+            self._retire_worker(name)
+            return
         try:
             ex.on_worker_start()
         except Exception:
             pass
+        idx = start_idx
+        try:
+            while True:
+                epoch = self._await_epoch(name, idx)
+                if epoch is None:
+                    break
+                idx = epoch.index + 1
+                if not self._run_epoch(name, ex, epoch):
+                    break                   # group failed: thread retires
+        finally:
+            self._retire_worker(name)
+
+    def _await_epoch(self, name: str, idx: int) -> Optional[EpochHandle]:
+        """Block until epoch ``idx`` (or a later open one) is available;
+        None on shutdown / group removal. Entering is atomic with the
+        finalized check so no records land on a finalized epoch. A worker
+        also *revisits* an older open epoch whose space regained work (a
+        failure requeued chunks after this worker had already left it) —
+        without that, work requeued after the other dispatchers moved on
+        would never be drained."""
+        with self._cv:
+            while True:
+                if name not in self.specs:
+                    return None
+                idx = max(idx, self._epoch_base)
+                for h in self._epochs:
+                    if h.index >= idx:
+                        break
+                    if not h.finalized and h.space.remaining > 0:
+                        idx = h.index
+                        break
+                while idx - self._epoch_base < len(self._epochs) \
+                        and self._epochs[idx - self._epoch_base].finalized:
+                    idx += 1
+                self._worker_pos[name] = idx
+                if idx - self._epoch_base < len(self._epochs):
+                    epoch = self._epochs[idx - self._epoch_base]
+                    if epoch.started_at is None:
+                        epoch.started_at = clock()
+                    return epoch
+                if self._shutdown:
+                    return None
+                self._cv.wait()
+
+    def _run_epoch(self, name: str, ex: ChunkExecutor,
+                   epoch: EpochHandle) -> bool:
+        """Process one epoch's tokens; returns False if the group died."""
+        part = self.partitioner
+        space = epoch.space
+        ok = True
         try:
             while True:
                 tc1 = clock()
-                token = part.next_token(name)
+                token = part.next_token(name, space)
                 tc2 = clock()
                 if token is None:
                     break
@@ -80,70 +320,113 @@ class DynamicScheduler:
                 try:
                     done = ex.execute(token, rec)
                 except ChunkFailure:
-                    part.requeue(token.chunk)
-                    part.remove_group(name)
-                    with self._rec_lock:
-                        self._failed.append(name)
-                    return
-                self._finalize(done)
-            self._finalize(ex.drain())
-        except Exception:
-            # unexpected executor error: fail the group, requeue nothing more
-            part.remove_group(name)
-            with self._rec_lock:
-                self._failed.append(name)
+                    self._finalize(ex.completed(), epoch)
+                    part.requeue(token.chunk, space)
+                    for chunk in ex.abort():
+                        part.requeue(chunk, space)
+                    self._mark_failed(name, epoch)
+                    return False
+                except Exception:
+                    self._finalize(ex.completed(), epoch)
+                    self._mark_failed(name, epoch)
+                    raise
+                self._finalize(done, epoch)
+            try:
+                self._finalize(ex.drain(), epoch)
+            except ChunkFailure:
+                self._finalize(ex.completed(), epoch)
+                for chunk in ex.abort():
+                    part.requeue(chunk, space)
+                self._mark_failed(name, epoch)
+                return False
+        except BaseException:
+            ok = False
             raise
+        finally:
+            self._leave_epoch(name, epoch)
+        return ok
 
-    def _finalize(self, recs: List[ChunkRecord]):
+    def _finalize(self, recs: List[ChunkRecord], epoch: EpochHandle) -> None:
         t = clock()
         for rec in recs:
-            rec.tc3 = t if rec.tc3 == 0.0 else rec.tc3
+            # pipelined executors stamp Tc3 per record at completion
+            # (dispatch.JaxChunkExecutor._complete_oldest); this is the
+            # fallback for synchronous executors only
+            if rec.tc3 == 0.0:
+                rec.tc3 = t
             self.tracker.update(rec)
             self.ledger.add(rec)
-            with self._rec_lock:
-                self._records.append(rec)
+            epoch.ledger.add(rec)
+            epoch._records.append(rec)
 
-    # ------------------------------------------------------------------
-    def add_group(self, spec: GroupSpec, executor: ChunkExecutor):
-        """Elastic scale-up during run()."""
-        self.specs[spec.name] = spec
-        self.executors[spec.name] = executor
-        if self.partitioner is not None:
-            self.partitioner.add_group(spec)
-            th = threading.Thread(target=self._worker, args=(spec.name,),
-                                  name=f"dispatch-{spec.name}", daemon=True)
-            self._threads[spec.name] = th
-            th.start()
+    def _mark_failed(self, name: str, epoch: EpochHandle) -> None:
+        """In-band group death: exclude it from this and all later epochs."""
+        with self._cv:
+            self._failed.append(name)
+            epoch._failed.append(name)
+            self.specs.pop(name, None)
+            self.executors.pop(name, None)
+            if self.partitioner is not None:
+                self.partitioner.remove_group(name)
+            self._cv.notify_all()
 
-    def run(self, begin: int, end: int) -> ScheduleResult:
-        space = IterationSpace(begin, end)
-        self.partitioner = HeterogeneousPartitioner(
-            space, self.specs, self.tracker, self.base_quantum)
-        t0 = clock()
-        for name in list(self.specs):
-            th = threading.Thread(target=self._worker, args=(name,),
-                                  name=f"dispatch-{name}", daemon=True)
-            self._threads[name] = th
-            th.start()
-        while True:
-            alive = [t for t in list(self._threads.values()) if t.is_alive()]
-            if not alive:
-                break
-            alive[0].join(timeout=0.05)
-        total = clock() - t0
+    def _leave_epoch(self, name: str, epoch: EpochHandle) -> None:
+        with self._cv:
+            self._worker_pos[name] = epoch.index + 1
+            self._maybe_finalize_locked(epoch)
+            self._prune_epochs_locked()
+            self._cv.notify_all()
+
+    def _retire_worker(self, name: str) -> None:
+        with self._cv:
+            self._worker_pos.pop(name, None)
+            if name not in self.specs:      # died/removed, not shutdown
+                self._threads.pop(name, None)
+            for h in self._epochs:
+                if not h.finalized:
+                    self._maybe_finalize_locked(h)
+            self._prune_epochs_locked()
+            self._cv.notify_all()
+
+    # -- epoch finalization --------------------------------------------
+    def _maybe_finalize_locked(self, epoch: EpochHandle) -> None:
+        if epoch.finalized:
+            return
+        if self._worker_pos and epoch.space.remaining > 0:
+            # a failure requeued work into this epoch; a live dispatcher
+            # will scan back and drain it (see _await_epoch)
+            return
+        if all(pos > epoch.index for pos in self._worker_pos.values()):
+            self._finalize_epoch_locked(epoch)
+
+    def _prune_epochs_locked(self) -> None:
+        """Drop finalized leading epochs every worker is already past —
+        keeps the epoch window (and its record lists) bounded on a
+        long-running daemon."""
+        min_pos = min(self._worker_pos.values(), default=None)
+        while self._epochs and self._epochs[0].finalized \
+                and (min_pos is None or min_pos > self._epochs[0].index):
+            self._epochs.popleft()
+            self._epoch_base += 1
+
+    def _finalize_epoch_locked(self, h: EpochHandle) -> None:
+        h.finished_at = clock()
+        t0 = h.started_at if h.started_at is not None else h.submitted_at
+        total = max(h.finished_at - t0, 0.0)
         per_items: Dict[str, int] = {}
-        for r in self._records:
+        for r in h._records:
             per_items[r.token.group] = per_items.get(r.token.group, 0) \
                 + r.token.chunk.size
-        overheads = {g: self.ledger.report(total, g)
-                     for g in self.ledger.groups()}
-        overheads["all"] = self.ledger.report(total)
-        return ScheduleResult(
+        overheads = {g: h.ledger.report(total, g)
+                     for g in h.ledger.groups()}
+        overheads["all"] = h.ledger.report(total)
+        h._result = ScheduleResult(
             total_time=total,
             iterations=sum(per_items.values()),
-            records=list(self._records),
+            records=list(h._records),
             overheads=overheads,
             throughput=self.tracker.snapshot(),
             per_group_items=per_items,
-            failed_groups=list(self._failed),
+            failed_groups=list(h._failed),
         )
+        h._event.set()

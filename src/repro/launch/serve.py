@@ -4,11 +4,15 @@
       --requests 64 --prompt-len 32 --decode-tokens 8 \\
       --groups accel:chunk=8:async=2,cpu0:slow=2
 
-Queued mode (admission control + priority queue + journal):
+Queued mode (admission control + priority queue + journal), drained onto
+the persistent scheduler runtime with a double-buffered batch pipeline:
 
   PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --reduced \\
       --queue --requests 64 --job-items 2 --slo 5.0 \\
-      --journal /tmp/serve.journal.jsonl
+      --pipeline-depth 2 --journal /tmp/serve.journal.jsonl
+
+``--rebuild-per-batch`` restores the old build-run-teardown scheduler per
+batch (the benchmarks/batch_boundary.py baseline).
 """
 from __future__ import annotations
 
@@ -43,6 +47,12 @@ def main():
                          "backpressure in --queue mode)")
     ap.add_argument("--journal", default=None,
                     help="JSONL journal path for durable job state")
+    ap.add_argument("--pipeline-depth", type=int, default=2,
+                    help="batches in flight on the persistent runtime "
+                         "(2 = double-buffered continuous drain)")
+    ap.add_argument("--rebuild-per-batch", action="store_true",
+                    help="legacy mode: fresh scheduler + dispatcher "
+                         "threads per batch (benchmark baseline)")
     args = ap.parse_args()
     if args.job_items < 1:
         ap.error("--job-items must be >= 1")
@@ -64,7 +74,9 @@ def main():
                 for i, n in enumerate(sizes)]
         rep = eng.serve_jobs(jobs, slo_delay_s=args.slo,
                              batch_jobs=args.batch_jobs,
-                             journal_path=args.journal)
+                             journal_path=args.journal,
+                             pipeline_depth=args.pipeline_depth,
+                             persistent=not args.rebuild_per_batch)
         print(json.dumps({
             "jobs": rep.jobs, "done": rep.done, "failed": rep.failed,
             "cancelled": rep.cancelled, "requeues": rep.requeues,

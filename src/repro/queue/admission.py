@@ -19,6 +19,13 @@ and the decision is a three-way gate against the delay SLO:
 Group membership is event-driven: ElasticController join/leave and
 scheduler group failures call on_group_join/on_group_leave, so capacity
 reacts to topology changes without polling.
+
+Straggler awareness: update_stragglers() feeds StragglerDetector reports
+into the capacity model — a group observed slowing to fraction f of its
+healthy baseline advertises only f of its λ-worth of capacity, so the
+admission gate backs off *before* the watchdog declares the group dead
+(the λ-EWMA alone reacts with the EWMA's lag; the derate is immediate
+and baseline-relative).
 """
 from __future__ import annotations
 
@@ -64,6 +71,7 @@ class AdmissionController:
         self.defer_factor = defer_factor
         self.min_capacity = min_capacity
         self._groups: Dict[str, float] = {}      # name -> λ seed
+        self._derate: Dict[str, float] = {}      # name -> straggler factor
         self._lock = threading.Lock()
         # counters for observability / tests
         self.admitted = 0
@@ -78,10 +86,26 @@ class AdmissionController:
     def on_group_leave(self, name: str) -> None:
         with self._lock:
             self._groups.pop(name, None)
+            self._derate.pop(name, None)
 
     def groups(self) -> Dict[str, float]:
         with self._lock:
             return dict(self._groups)
+
+    # -- straggler derating (StragglerDetector reports) ----------------
+    def update_stragglers(self, slowdowns: Dict[str, float]) -> None:
+        """Replace the derate map from a detector observation: groups
+        reported straggling advertise ``slowdown`` (current λ / healthy
+        baseline, clamped to [0.05, 1.0]) of their capacity; groups no
+        longer reported recover full weight."""
+        with self._lock:
+            self._derate = {
+                name: min(1.0, max(0.05, f))
+                for name, f in slowdowns.items() if name in self._groups}
+
+    def derate(self, name: str) -> float:
+        with self._lock:
+            return self._derate.get(name, 1.0)
 
     # -- capacity model ------------------------------------------------
     def _useful_fraction(self, group: str) -> float:
@@ -103,7 +127,7 @@ class AdmissionController:
             lam = self.tracker.get(name) if self.tracker is not None else seed
             if lam <= 0.0:
                 lam = seed
-            cap += lam * self._useful_fraction(name)
+            cap += lam * self._useful_fraction(name) * self.derate(name)
         return max(cap, self.min_capacity)
 
     def projected_delay_s(self, extra_items: int = 0) -> float:

@@ -49,6 +49,35 @@ class JournalStore:
             if not self._fh.closed:
                 self._fh.close()
 
+    # -- compaction ----------------------------------------------------
+    def compact(self) -> int:
+        """Rewrite the journal keeping only the latest record per job.
+
+        A long-lived daemon's journal grows by one line per transition;
+        replay only ever uses the last line per job id, so everything
+        before it is dead weight. The rewrite goes to a temp file that is
+        atomically renamed over the journal (a crash mid-compaction leaves
+        either the old or the new file, never a mix); the append handle is
+        reopened on the compacted file. Returns the number of jobs kept.
+        """
+        with self._lock:
+            if not self._fh.closed:
+                self._fh.close()
+            jobs = self.replay(self.path)
+            tmp = self.path + ".compact"
+            with open(tmp, "w", encoding="utf-8") as fh:
+                for job in sorted(jobs.values(),
+                                  key=lambda j: (j.created_at, j.job_id)):
+                    fh.write(json.dumps(
+                        {"ts": time.time(), "event": job.state.value,
+                         "job": job.to_dict()}, sort_keys=True) + "\n")
+                fh.flush()
+                if self.fsync:
+                    os.fsync(fh.fileno())
+            os.replace(tmp, self.path)
+            self._fh = open(self.path, "a", encoding="utf-8")
+            return len(jobs)
+
     def __enter__(self) -> "JournalStore":
         return self
 

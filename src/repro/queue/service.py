@@ -1,31 +1,45 @@
-"""JobService: the daemon loop that drains the queue into scheduler runs.
+"""JobService: continuous drain of the queue into the persistent runtime.
 
-Each drain pops up to ``batch_jobs`` jobs (priority order), concatenates
-their items into one iteration space, and hands it to a fresh
-DynamicScheduler run — the paper's §3.1 pipeline is the *execution* layer;
-this is the *admission-to-execution* bridge. When a device group dies
-mid-run the scheduler's own chunk requeue (work conservation on iteration
-count) still completes the batch, so jobs are DONE; a run that loses
-*all* groups completes only part of its count, and since the runtime
-conserves count, not iteration identity, there is no way to attribute the
-partial completion to specific jobs — the whole batch is REQUEUED
-(at-least-once semantics, bounded by ``max_attempts``). This is the
-ChunkFailure → requeue conversion the fault-tolerance layer promises.
+Each batch pops up to ``batch_jobs`` jobs (priority order), concatenates
+their items into one iteration space, and submits it as an *epoch* on a
+long-lived DynamicScheduler runtime — the paper's §3.1 pipeline is the
+*execution* layer; this is the *admission-to-execution* bridge. The drain
+is double-buffered (``pipeline_depth``, default 2): batch N+1 is popped,
+marked RUNNING, and submitted while batch N's chunks are still in flight,
+so the inter-batch barrier (scheduler rebuild + thread spawn + join) that
+the rebuild-per-batch design paid disappears; benchmarks/batch_boundary.py
+quantifies the difference. ``persistent=False`` restores the old
+build-run-teardown behavior per batch (the benchmark baseline).
 
-Group failures observed in a run (in-band ChunkFailure) and hangs caught
-by the runtime Watchdog both flow to the AdmissionController as
-on_group_leave events, shrinking advertised capacity immediately.
+When a device group dies mid-epoch the scheduler's own chunk requeue
+(work conservation on iteration count) still completes the epoch, so jobs
+are DONE; an epoch that loses *all* groups completes only part of its
+count, and since the runtime conserves count, not iteration identity,
+there is no way to attribute the partial completion to specific jobs —
+the whole batch is REQUEUED (at-least-once semantics, bounded by
+``max_attempts``). A runtime with no live groups left is rebuilt from
+``make_scheduler`` before the next batch. This is the ChunkFailure →
+requeue conversion the fault-tolerance layer promises.
+
+Group failures observed in an epoch (in-band ChunkFailure) and hangs
+caught by the runtime Watchdog both flow to the AdmissionController as
+on_group_leave events, shrinking advertised capacity immediately; a
+StragglerDetector, when attached, derates a slowing group's advertised
+capacity *before* it is declared dead.
 """
 from __future__ import annotations
 
+import collections
 import logging
 import math
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
-from repro.core.scheduler import DynamicScheduler, ScheduleResult
+from repro.core.scheduler import DynamicScheduler, EpochHandle, \
+    ScheduleResult
+from repro.core.types import IterationSpace
 from repro.queue.admission import AdmissionController, AdmissionDecision, \
     Decision
 from repro.queue.job import Job, JobState
@@ -37,7 +51,14 @@ try:                                    # optional hang detection
 except Exception:                       # pragma: no cover
     Watchdog = None                     # type: ignore
 
+try:                                    # optional straggler derating
+    from repro.runtime.straggler import StragglerDetector
+except Exception:                       # pragma: no cover
+    StragglerDetector = None            # type: ignore
+
 logger = logging.getLogger(__name__)
+
+clock = time.monotonic
 
 
 def percentiles(xs: Sequence[float],
@@ -61,6 +82,8 @@ class BatchReport:
     total_items: int
     failed_groups: List[str]
     schedule: Optional[ScheduleResult] = None
+    submitted_at: float = 0.0
+    finished_at: float = 0.0
 
 
 @dataclass
@@ -72,9 +95,35 @@ class ServiceStats:
     queue_delays: List[float] = field(default_factory=list)
     per_group_items: Dict[str, int] = field(default_factory=dict)
     errors: List[str] = field(default_factory=list)
+    # batches submitted before the previous batch finished — the
+    # double-buffered drain working (counted incrementally)
+    overlapped: int = 0
+    # (submitted_at, finished_at) monotonic stamps of recent batches;
+    # capped so a long-lived daemon's memory stays bounded
+    batch_windows: List[Tuple[float, float]] = field(default_factory=list)
+    WINDOW_CAP = 10_000
 
     def delay_percentiles(self) -> Dict[str, float]:
         return percentiles(self.queue_delays)
+
+    def overlapped_batches(self) -> int:
+        """Batches submitted before the previous batch finished."""
+        return self.overlapped
+
+    def record_window(self, submitted_at: float, finished_at: float) -> None:
+        if self.batch_windows and submitted_at < self.batch_windows[-1][1]:
+            self.overlapped += 1
+        if len(self.batch_windows) < self.WINDOW_CAP:
+            self.batch_windows.append((submitted_at, finished_at))
+
+
+@dataclass
+class _InflightBatch:
+    jobs: List[Job]
+    total: int
+    submitted_at: float
+    handle: Optional[EpochHandle] = None
+    error: Optional[BaseException] = None
 
 
 class JobService:
@@ -84,7 +133,9 @@ class JobService:
                  journal: Optional[JournalStore] = None,
                  batch_jobs: int = 8, poll_s: float = 0.05,
                  watchdog: Optional["Watchdog"] = None,
-                 on_group_failed: Optional[Callable[[str], None]] = None):
+                 on_group_failed: Optional[Callable[[str], None]] = None,
+                 pipeline_depth: int = 2, persistent: bool = True,
+                 straggler: Optional["StragglerDetector"] = None):
         self.make_scheduler = make_scheduler
         self.queue = queue or QueueManager()
         self.admission = admission
@@ -93,11 +144,16 @@ class JobService:
         self.poll_s = poll_s
         self.watchdog = watchdog
         self.on_group_failed = on_group_failed
+        self.pipeline_depth = max(1, pipeline_depth)
+        self.persistent = persistent
+        self.straggler = straggler
         self.stats = ServiceStats()
         self._deferred: List[Job] = []
         self._lock = threading.Lock()
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
+        self._sched: Optional[DynamicScheduler] = None
+        self._inflight: Deque[_InflightBatch] = collections.deque()
 
     # -- journaling ----------------------------------------------------
     def _journal(self, job: Job, event: Optional[str] = None) -> None:
@@ -140,38 +196,100 @@ class JobService:
                 admitted += dec.decision == Decision.ADMIT
         return admitted
 
-    # -- the drain -----------------------------------------------------
-    def drain_once(self, block_s: float = 0.0) -> Optional[BatchReport]:
-        """Pop a batch, run it through one DynamicScheduler, finalize."""
+    # -- the persistent runtime ----------------------------------------
+    def _scheduler(self) -> DynamicScheduler:
+        """Live runtime, rebuilt from the factory only when every group
+        has died (the persistent-runtime analogue of per-batch rebuild)."""
+        s = self._sched
+        if s is not None and s.live_groups():
+            return s
+        if s is not None:
+            s.shutdown()
+        s = self.make_scheduler()
+        s.start()
+        self._sched = s
+        return s
+
+    def scheduler(self) -> Optional[DynamicScheduler]:
+        """The live runtime, if one has been built."""
+        return self._sched
+
+    # -- health signals ------------------------------------------------
+    def _poll_health(self) -> None:
+        if self.watchdog is not None:
+            for g in self.watchdog.check():
+                if self._sched is not None:
+                    self._sched.remove_group(g)
+                if self.admission is not None:
+                    self.admission.on_group_leave(g)
+                if self.on_group_failed is not None:
+                    self.on_group_failed(g)
+        if self.straggler is not None and self.admission is not None:
+            reports = self.straggler.observe()
+            self.admission.update_stragglers(
+                {r.group: r.slowdown for r in reports})
+
+    # -- batch pipeline ------------------------------------------------
+    def _pop_batch(self, block_s: float = 0.0) -> List[Job]:
         jobs: List[Job] = []
         first = self.queue.pop(timeout=block_s or None)
         if first is None:
-            return None
+            return jobs
         jobs.append(first)
         while len(jobs) < self.batch_jobs:
             nxt = self.queue.pop()
             if nxt is None:
                 break
             jobs.append(nxt)
+        return jobs
 
+    def _submit_batch(self, jobs: List[Job]) -> Optional[BatchReport]:
+        """Mark a batch RUNNING and submit its epoch. On submit failure the
+        batch is finalized immediately (returns its report); otherwise it
+        joins the in-flight pipeline and None is returned."""
         total = sum(j.items for j in jobs)
         for j in jobs:
             self.queue.mark_running(j)
             self._journal(j)
+        ib = _InflightBatch(jobs=jobs, total=total, submitted_at=clock())
+        if not self.persistent:
+            return self._run_batch_sync(ib)
+        try:
+            sched = self._scheduler()
+            ib.handle = sched.submit_epoch(IterationSpace(0, total))
+        except Exception as e:          # broken factory / submit: fail the
+            ib.error = e                # batch, not the daemon
+            logger.exception("batch of %d jobs failed to submit", len(jobs))
+            return self._finalize_batch(ib)
+        self._inflight.append(ib)
+        return None
+
+    def _run_batch_sync(self, ib: _InflightBatch) -> BatchReport:
+        """Rebuild-per-batch compat mode: fresh scheduler, one-shot run
+        (thread spawn + join per batch — the benchmark baseline)."""
         try:
             sched = self.make_scheduler()
-            res = sched.run(0, total)
+            res = sched.run(0, ib.total)
+            ib.handle = _DoneHandle(res, ib.submitted_at)
+        except Exception as e:
+            ib.error = e
+            logger.exception("batch of %d jobs failed to run", len(ib.jobs))
+        return self._finalize_batch(ib)
+
+    def _finalize_batch(self, ib: _InflightBatch) -> BatchReport:
+        res: Optional[ScheduleResult] = None
+        completed, failed_groups = 0, []
+        if ib.error is not None:
+            if len(self.stats.errors) < 100:
+                self.stats.errors.append(repr(ib.error))
+            for j in ib.jobs:
+                j.meta["last_error"] = repr(ib.error)
+        else:
+            res = ib.handle.result()
             completed, failed_groups = res.iterations, res.failed_groups
             for g, n in res.per_group_items.items():
                 self.stats.per_group_items[g] = \
                     self.stats.per_group_items.get(g, 0) + n
-        except Exception as e:          # broken factory / run: fail the
-            res, completed, failed_groups = None, 0, []   # batch, not the
-            logger.exception("batch of %d jobs failed to run", len(jobs))
-            if len(self.stats.errors) < 100:              # daemon
-                self.stats.errors.append(repr(e))
-            for j in jobs:
-                j.meta["last_error"] = repr(e)
 
         for g in failed_groups:
             if self.admission is not None:
@@ -183,8 +301,8 @@ class JobService:
         # not identity (a re-executed chunk is fresh range at the end of
         # the space), so a partial count cannot be attributed to specific
         # jobs — never mark a job DONE whose items may not have run
-        done = completed >= total
-        for j in jobs:
+        done = completed >= ib.total
+        for j in ib.jobs:
             if done:
                 self.queue.mark_finished(j, JobState.DONE)
                 self.stats.done += 1
@@ -199,16 +317,65 @@ class JobService:
                 self.stats.failed += 1
             self._journal(j)
         self.stats.batches += 1
-        return BatchReport(jobs, min(completed, total), total,
-                           list(failed_groups), res)
+        finished = clock()
+        self.stats.record_window(ib.submitted_at, finished)
+        return BatchReport(ib.jobs, min(completed, ib.total), ib.total,
+                           list(failed_groups), res,
+                           submitted_at=ib.submitted_at,
+                           finished_at=finished)
+
+    def _pump(self, block_s: float = 0.0) -> bool:
+        """One pipeline step: keep up to ``pipeline_depth`` batches in
+        flight, finalize completed ones in submission order. Returns
+        whether any batch was submitted or finalized."""
+        progressed = False
+        while len(self._inflight) < self.pipeline_depth:
+            jobs = self._pop_batch(0.0 if (self._inflight or progressed)
+                                   else block_s)
+            if not jobs:
+                break
+            rep = self._submit_batch(jobs)
+            progressed = True
+            if rep is not None:             # sync mode / submit failure
+                break
+        while self._inflight:
+            # block only when no new batch can be submitted anyway (full
+            # pipeline, or an idle pass) — otherwise just poll
+            full = len(self._inflight) >= self.pipeline_depth
+            timeout = block_s if (full or not progressed) else 0.0
+            if not self._inflight[0].handle.wait(timeout):
+                break
+            self._finalize_batch(self._inflight.popleft())
+            progressed = True
+        return progressed
+
+    # -- one-shot drains (compat + tests) ------------------------------
+    def drain_once(self, block_s: float = 0.0) -> Optional[BatchReport]:
+        """Pop one batch, run it to completion, finalize. Any batches
+        already in the pipeline are finalized first (submission order)."""
+        while self._inflight:
+            ib = self._inflight.popleft()
+            ib.handle.wait()
+            self._finalize_batch(ib)
+        jobs = self._pop_batch(block_s)
+        if not jobs:
+            return None
+        rep = self._submit_batch(jobs)
+        if rep is not None:
+            return rep
+        ib = self._inflight.popleft()
+        ib.handle.wait()
+        return self._finalize_batch(ib)
 
     def run_until_idle(self, timeout_s: float = 60.0) -> bool:
-        """Drain until queue + deferred list are empty; False on timeout."""
+        """Drain (pipelined) until queue + deferred + in-flight are empty;
+        False on timeout."""
         deadline = time.monotonic() + timeout_s
         while time.monotonic() < deadline:
             self.retry_deferred()
-            rep = self.drain_once()
-            if rep is not None:
+            self._poll_health()
+            progressed = self._pump(block_s=self.poll_s)
+            if progressed or self._inflight:
                 continue
             with self._lock:
                 idle = not self._deferred
@@ -231,15 +398,42 @@ class JobService:
         if join and self._thread is not None:
             self._thread.join(timeout=10.0)
         self._thread = None
+        # finalize whatever the daemon left in flight (runtime is alive)
+        while self._inflight:
+            ib = self._inflight.popleft()
+            if ib.handle is not None and not ib.handle.wait(10.0):
+                ib.error = TimeoutError("epoch unfinished at stop()")
+            self._finalize_batch(ib)
+
+    def close(self) -> None:
+        """Stop the daemon (if running) and shut the runtime down."""
+        self.stop()
+        if self._sched is not None:
+            self._sched.shutdown()
+            self._sched = None
 
     def _loop(self) -> None:
         while not self._stop.is_set():
             self.retry_deferred()
-            if self.watchdog is not None:
-                for g in self.watchdog.check():
-                    if self.admission is not None:
-                        self.admission.on_group_leave(g)
-                    if self.on_group_failed is not None:
-                        self.on_group_failed(g)
-            if self.drain_once(block_s=self.poll_s) is None:
+            self._poll_health()
+            if not self._pump(block_s=self.poll_s) and not self._inflight:
                 time.sleep(self.poll_s)
+
+
+class _DoneHandle:
+    """Adapter giving a completed one-shot run the EpochHandle surface."""
+
+    def __init__(self, res: ScheduleResult, submitted_at: float):
+        self._res = res
+        self.submitted_at = submitted_at
+        self.started_at = submitted_at
+        self.finished_at = clock()
+
+    def done(self) -> bool:
+        return True
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        return True
+
+    def result(self, timeout: Optional[float] = None) -> ScheduleResult:
+        return self._res

@@ -1,12 +1,15 @@
-"""Elastic scaling: device groups join/leave a running schedule.
+"""Elastic scaling: device groups join/leave the live scheduler runtime.
 
-Join: DynamicScheduler.add_group spawns a dispatcher thread; the partitioner
-seeds the newcomer's λ and eq. (4) immediately sizes its chunks — no global
-pause, no re-partitioning of in-flight work. Leave: remove_group (drain) or
-ChunkFailure (abrupt, chunk requeued). This module is the small policy layer:
-it owns GroupSpec construction and the λ seeding choice for newcomers
-(median of current same-kind groups, so a new BIG node doesn't start with a
-wildly wrong chunk size).
+Join: DynamicScheduler.add_group spawns a dispatcher thread that enters the
+oldest open epoch; the partitioner seeds the newcomer's λ and eq. (4)
+immediately sizes its chunks — no global pause, no re-partitioning of
+in-flight work. Leave: DynamicScheduler.remove_group drains the group out
+*everywhere* (specs, executors, partitioner) so neither a scheduler rebuild
+nor the persistent runtime's next epoch can resurrect it; ChunkFailure
+(abrupt, chunk requeued) takes the same path in-band. This module is the
+small policy layer: it owns GroupSpec construction and the λ seeding choice
+for newcomers (median of current same-kind groups, so a new BIG node
+doesn't start with a wildly wrong chunk size).
 
 When an AdmissionController (repro.queue) is attached, join/leave events
 flow to it so advertised capacity — and therefore the queue-delay
@@ -45,7 +48,9 @@ class ElasticController:
         return spec
 
     def leave(self, name: str):
-        if self.scheduler.partitioner is not None:
-            self.scheduler.partitioner.remove_group(name)
+        # remove everywhere — leaving the group in scheduler.specs /
+        # scheduler.executors would resurrect it on the next epoch (or on
+        # any rebuild from those dicts)
+        self.scheduler.remove_group(name)
         if self.admission is not None:
             self.admission.on_group_leave(name)

@@ -68,9 +68,13 @@ class HeteroServeEngine:
         self.alpha = alpha
         self.params = M.init_params(cfg, jax.random.PRNGKey(seed))
         self._fns: Dict[int, tuple] = {}
-        # fail-injection counters persist across per-batch executors so an
-        # injected group death stays dead over a queued multi-batch run
+        # fail-injection counters persist across executors so an injected
+        # group death stays dead over a queued multi-batch run
         self._fail_counters: Dict[str, Dict[str, int]] = {}
+        # executors are built once per group and reused across epochs /
+        # scheduler rebuilds (their jitted fns and inflight pipelines are
+        # runtime-scoped, not batch-scoped)
+        self._executors: Dict[str, JaxChunkExecutor] = {}
 
     # ------------------------------------------------------------------
     def _fns_for(self, b: int):
@@ -145,6 +149,12 @@ class HeteroServeEngine:
                                 async_depth=g.async_depth,
                                 priority_boost=g.priority_boost)
 
+    def _executor_for(self, g: GroupDef) -> JaxChunkExecutor:
+        ex = self._executors.get(g.name)
+        if ex is None:
+            ex = self._executors[g.name] = self._make_executor(g)
+        return ex
+
     # ------------------------------------------------------------------
     def _build_scheduler(self, max_chunk: Optional[int] = None,
                          exclude: Optional[set] = None) -> DynamicScheduler:
@@ -156,7 +166,7 @@ class HeteroServeEngine:
                                       fixed_chunk=g.fixed_chunk,
                                       min_chunk=1, max_chunk=max_chunk,
                                       init_throughput=1.0)
-            execs[g.name] = self._make_executor(g)
+            execs[g.name] = self._executor_for(g)
         if not specs:
             raise RuntimeError("no live device groups")
         return DynamicScheduler(specs, execs, alpha=self.alpha)
@@ -180,15 +190,23 @@ class HeteroServeEngine:
                    slo_delay_s: Optional[float] = None,
                    batch_jobs: int = 8,
                    journal_path: Optional[str] = None,
-                   timeout_s: float = 300.0) -> QueueServeReport:
+                   timeout_s: float = 300.0,
+                   pipeline_depth: int = 2,
+                   persistent: bool = True) -> QueueServeReport:
         """Serve prioritized jobs through admission control + queue.
 
-        λ-estimates and overhead fractions are shared across the per-batch
-        scheduler runs (one ThroughputTracker / OverheadLedger for the
-        whole session), so admission's capacity model and the partitioner
-        both warm up once and stay warm. ``slo_delay_s=None`` disables the
-        admission gate (every job is queued). Groups that die mid-run are
-        excluded from subsequent batches.
+        Batches drain onto one *persistent* scheduler runtime: dispatcher
+        threads and (cached) executors are built once and reused across
+        epochs, and with ``pipeline_depth ≥ 2`` batch N+1 is dispatched
+        while batch N is still in flight (continuous double-buffered
+        drain — no inter-batch barrier, no per-batch rebuild).
+        λ-estimates and overhead fractions are runtime-scoped (one
+        ThroughputTracker / OverheadLedger for the whole session), so
+        admission's capacity model and the partitioner both warm up once
+        and stay warm. ``slo_delay_s=None`` disables the admission gate
+        (every job is queued). Groups that die mid-run stay excluded for
+        the rest of the session. ``persistent=False`` restores the old
+        rebuild-per-batch behavior (benchmark baseline).
         """
         tracker = ThroughputTracker(self.alpha)
         ledger = OverheadLedger()
@@ -196,8 +214,10 @@ class HeteroServeEngine:
         dead: set = set()
 
         def make_scheduler() -> DynamicScheduler:
+            # called once for the persistent runtime; again only if every
+            # group died (or per batch with persistent=False)
             sched = self._build_scheduler(exclude=dead)
-            sched.tracker = tracker           # shared across batches
+            sched.tracker = tracker           # runtime-scoped λ / §3.3
             sched.ledger = ledger
             return sched
 
@@ -212,12 +232,15 @@ class HeteroServeEngine:
         service = JobService(make_scheduler, queue=queue,
                              admission=admission, journal=journal,
                              batch_jobs=batch_jobs,
-                             on_group_failed=dead.add)
+                             on_group_failed=dead.add,
+                             pipeline_depth=pipeline_depth,
+                             persistent=persistent)
         t0 = time.monotonic()
         for job in jobs:
             service.submit(job)
         drained = service.run_until_idle(timeout_s=timeout_s)
         dt = time.monotonic() - t0
+        service.close()
         if journal is not None:
             journal.close()
         st = service.stats

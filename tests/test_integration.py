@@ -60,9 +60,12 @@ def test_trainer_checkpoint_resume(tiny_cfg, tmp_path):
 def test_trainer_survives_group_failure(tiny_cfg):
     """A group dying mid-step must not lose samples: its in-flight chunk is
     re-queued and absorbed by the survivors (end-to-end fault tolerance)."""
+    # fail_after_chunks=0: cpu0 dies on its very first chunk — with
+    # fail_after_chunks=1 the test raced accel draining the space before
+    # cpu0 could reach a second chunk (flaky on loaded hosts)
     groups = [
         GroupDef("accel", DeviceKind.ACCEL, fixed_chunk=8),
-        GroupDef("cpu0", DeviceKind.BIG, fail_after_chunks=1),
+        GroupDef("cpu0", DeviceKind.BIG, fail_after_chunks=0),
     ]
     tr = HeteroTrainer(tiny_cfg, groups, seq_len=32, global_batch=32,
                        oc=OptConfig(lr=1e-3, warmup_steps=1))

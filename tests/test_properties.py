@@ -134,6 +134,69 @@ def test_search_chunk_invariants(seed, peak_at_mult, max_chunk):
 
 
 # ---------------------------------------------------------------------------
+# persistent runtime: invariants across ≥3 consecutive epochs
+# ---------------------------------------------------------------------------
+
+@given(
+    # ≥3000 iterations/epoch: cpu1's death (chunk ≤ fail_after+1, ~64
+    # items each) is guaranteed to land inside epoch 0, not a later one
+    sizes=st.lists(st.integers(3_000, 8_000), min_size=3, max_size=4),
+    kill_cpu1=st.booleans(),
+    fail_after=st.integers(1, 3),
+)
+@settings(max_examples=10, deadline=None)
+def test_epoch_reuse_invariants(sizes, kill_cpu1, fail_after):
+    """Work conservation and λ-EWMA continuity hold across consecutive
+    epochs on one runtime; a group death in epoch 0 stays excluded from
+    every later epoch."""
+    from repro.core import DynamicScheduler, SleepExecutor
+
+    groups = {
+        "accel": GroupSpec("accel", DeviceKind.ACCEL, fixed_chunk=256,
+                           init_throughput=400_000),
+        "cpu0": GroupSpec("cpu0", DeviceKind.BIG, init_throughput=100_000,
+                          min_chunk=4),
+        "cpu1": GroupSpec("cpu1", DeviceKind.BIG, init_throughput=100_000,
+                          min_chunk=4),
+    }
+    execs = {
+        "accel": SleepExecutor(rate=400_000),
+        "cpu0": SleepExecutor(rate=100_000),
+        "cpu1": SleepExecutor(
+            rate=100_000, fail_after=fail_after if kill_cpu1 else None),
+    }
+    s = DynamicScheduler(groups, execs, alpha=0.5)
+    s.start()
+    try:
+        idents = {n: th.ident for n, th in s.dispatchers().items()}
+        chunk_counts = []
+        for i, n in enumerate(sizes):
+            res = s.submit_epoch((0, n)).result(timeout=60)
+            # work conservation per epoch: every requested iteration ran
+            # (== without failure; ≥ when a re-executed chunk repeats work)
+            assert res.iterations >= n
+            if not res.failed_groups:
+                assert res.iterations == n
+            assert sum(res.per_group_items.values()) == res.iterations
+            if kill_cpu1 and i == 0:
+                assert "cpu1" in res.failed_groups
+            if i > 0:
+                # dead group stays excluded in every later epoch
+                if kill_cpu1:
+                    assert "cpu1" not in res.per_group_items
+                    assert "cpu1" not in s.live_groups()
+                # λ-EWMA continuity: the tracker accumulates across epochs
+                # instead of resetting with a fresh scheduler
+                assert s.tracker.stats("accel").n > chunk_counts[-1]
+                # surviving dispatcher threads are the original ones
+                live = s.dispatchers()
+                assert all(live[g].ident == idents[g] for g in live)
+            chunk_counts.append(s.tracker.stats("accel").n)
+    finally:
+        s.shutdown()
+
+
+# ---------------------------------------------------------------------------
 # simulator invariants under random configurations
 # ---------------------------------------------------------------------------
 

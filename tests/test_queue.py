@@ -1,6 +1,7 @@
 """Unit tests for repro.queue: state machine legality, heap ordering with
-requeue, admission backpressure under synthetic overload, journal
-crash-recovery replay, and the JobService drain loop."""
+requeue, admission backpressure under synthetic overload, straggler
+derating, journal crash-recovery replay + compaction, and the JobService
+continuous double-buffered drain."""
 import json
 import os
 
@@ -12,6 +13,7 @@ from repro.queue import (AdmissionController, Decision, IllegalTransition,
                          QueueManager, percentiles)
 from repro.core.throughput import ThroughputTracker
 from repro.runtime.elastic import ElasticController
+from repro.runtime.straggler import StragglerDetector
 
 
 # ---------------------------------------------------------------------------
@@ -185,6 +187,47 @@ def test_capacity_follows_group_leave_and_tracker():
     assert adm.capacity_items_s() == pytest.approx(100.0)
 
 
+def test_straggler_derates_capacity_before_death():
+    """A group slowing mid-run advertises less capacity via the detector →
+    admission derate path, while still being a live (not dead) group."""
+    groups = {
+        "fast": GroupSpec("fast", DeviceKind.BIG, init_throughput=50_000,
+                          min_chunk=64),
+        "slow": GroupSpec("slow", DeviceKind.BIG, init_throughput=50_000,
+                          min_chunk=64),
+    }
+    execs = {
+        "fast": SleepExecutor(rate=50_000),
+        # healthy through all of epoch 1 (~8 chunks), then 10x slower
+        # partway through epoch 2 — a mid-run straggler
+        "slow": SleepExecutor(rate=50_000, slow_after=30, slow_factor=10.0),
+    }
+    # EWMA (not last-interval) so a shrunken final chunk's noisy λ cannot
+    # flag the healthy group; 0.4 threshold leaves margin for sleep jitter
+    sched = DynamicScheduler(groups, execs, alpha=0.5)
+    q = QueueManager()
+    adm = AdmissionController(q, tracker=sched.tracker, slo_delay_s=1.0)
+    adm.on_group_join("fast", 50_000)
+    adm.on_group_join("slow", 50_000)
+    det = StragglerDetector(sched.tracker, threshold=0.4, warmup_chunks=3)
+    sched.start()
+    try:
+        sched.submit_epoch((0, 4_096)).result(timeout=30)
+        det.observe()                       # records healthy baselines
+        sched.submit_epoch((0, 24_000)).result(timeout=30)
+        cap_before = adm.capacity_items_s()
+        reports = det.observe()
+        assert any(r.group == "slow" for r in reports)
+        assert all(r.group != "fast" for r in reports)
+        adm.update_stragglers({r.group: r.slowdown for r in reports})
+        # capacity drops, but the group is derated, not declared dead
+        assert adm.capacity_items_s() < cap_before
+        assert adm.derate("slow") < 1.0 and adm.derate("fast") == 1.0
+        assert "slow" in adm.groups() and "slow" in sched.live_groups()
+    finally:
+        sched.shutdown()
+
+
 def test_elastic_controller_notifies_admission():
     groups = {"g0": GroupSpec("g0", DeviceKind.BIG, init_throughput=50.0)}
     execs = {"g0": SleepExecutor(rate=50.0)}
@@ -226,6 +269,40 @@ def test_journal_tolerates_torn_tail(tmp_path):
         fh.write('{"ts": 1.0, "event": "running", "job": {"job_id"')
     final = JournalStore.replay(path)
     assert final[a.job_id].state == JobState.ADMITTED
+
+
+def test_journal_compact_keeps_latest_record_per_job(tmp_path):
+    path = str(tmp_path / "journal.jsonl")
+    jobs = [Job(items=i + 1) for i in range(5)]
+    js = JournalStore(path)
+    for j in jobs:
+        js.record(j, "submitted")
+        j.transition(JobState.ADMITTED); js.record(j)
+    for j in jobs[:3]:                     # three full lifecycles
+        j.transition(JobState.RUNNING); js.record(j)
+        j.transition(JobState.DONE); js.record(j)
+    before = JournalStore.replay(path)
+    n_lines_before = sum(1 for _ in open(path))
+    assert n_lines_before == 5 * 2 + 3 * 2
+
+    kept = js.compact()
+    assert kept == 5
+    n_lines_after = sum(1 for _ in open(path))
+    assert n_lines_after == 5              # one line per job
+
+    # replay after compaction matches replay before
+    after = JournalStore.replay(path)
+    assert set(after) == set(before)
+    for jid, job in before.items():
+        assert after[jid].state == job.state
+        assert after[jid].items == job.items
+        assert after[jid].attempts == job.attempts
+
+    # the store keeps appending fine after compaction
+    jobs[3].transition(JobState.RUNNING); js.record(jobs[3])
+    js.close()
+    assert JournalStore.replay(path)[jobs[3].job_id].state \
+        == JobState.RUNNING
 
 
 def test_recover_requeues_inflight_jobs(tmp_path):
@@ -333,6 +410,44 @@ def test_deferred_jobs_admitted_as_backlog_drains():
     assert decisions[1].decision == Decision.DEFER
     assert svc.run_until_idle(timeout_s=60)
     assert all(j.state == JobState.DONE for j in jobs)
+
+
+def test_service_double_buffered_drain_overlaps_batches():
+    """The continuous drain dispatches batch N+1 while batch N is still in
+    flight: submission/finish windows of consecutive batches overlap."""
+    svc = JobService(_make_sched, batch_jobs=2, pipeline_depth=2)
+    jobs = [Job(items=2_000) for _ in range(8)]    # 4 batches, ~40ms each
+    for j in jobs:
+        svc.submit(j)
+    assert svc.run_until_idle(timeout_s=60)
+    assert all(j.state == JobState.DONE for j in jobs)
+    windows = svc.stats.batch_windows
+    assert len(windows) == 4
+    # batch k+1 was submitted before batch k finished, at least once
+    # (with a warm pipeline, every boundary overlaps)
+    assert svc.stats.overlapped_batches() >= 1
+    svc.close()
+
+
+def test_service_runtime_persists_across_batches():
+    """The persistent JobService builds the scheduler once: same runtime
+    object and same dispatcher threads across batches."""
+    built = []
+
+    def factory():
+        s = _make_sched()
+        built.append(s)
+        return s
+
+    svc = JobService(factory, batch_jobs=1)
+    jobs = [Job(items=512) for _ in range(6)]
+    for j in jobs:
+        svc.submit(j)
+    assert svc.run_until_idle(timeout_s=30)
+    assert all(j.state == JobState.DONE for j in jobs)
+    assert svc.stats.batches == 6
+    assert len(built) == 1                 # no per-batch rebuild
+    svc.close()
 
 
 def test_percentiles_nearest_rank():

@@ -100,3 +100,227 @@ def test_overheads_measured_positive():
     ov = res.overheads["accel"]
     assert ov["O_kl"] > ov["O_hd"] > 0
     assert ov["kernel_frac"] > 0
+
+
+# ---------------------------------------------------------------------------
+# persistent runtime: epoch reuse without thread teardown
+# ---------------------------------------------------------------------------
+
+def test_persistent_runtime_reuses_threads_across_epochs():
+    s = DynamicScheduler(groups3(), execs3(), alpha=0.5)
+    s.start()
+    try:
+        idents0 = {n: th.ident for n, th in s.dispatchers().items()}
+        assert len(idents0) == 3
+        chunks_seen = 0
+        for _ in range(3):
+            res = s.submit_epoch((0, 5_000)).result(timeout=30)
+            assert res.iterations == 5_000
+            # same OS threads, still alive: no re-spawn between epochs
+            live = s.dispatchers()
+            assert {n: th.ident for n, th in live.items()} == idents0
+            assert all(th.is_alive() for th in live.values())
+            # λ-EWMA continuity: the tracker accumulates across epochs
+            n = s.tracker.stats("accel").n
+            assert n > chunks_seen
+            chunks_seen = n
+    finally:
+        s.shutdown()
+    assert all(not th.is_alive() for th in s.dispatchers().values())
+
+
+def test_epoch_overlap_no_global_barrier():
+    s = DynamicScheduler(groups3(), execs3(), alpha=0.5)
+    s.start()
+    try:
+        h1 = s.submit_epoch((0, 40_000))
+        h2 = s.submit_epoch((0, 40_000))
+        r1, r2 = h1.result(timeout=30), h2.result(timeout=30)
+        assert r1.iterations == r2.iterations == 40_000
+        # epoch 2 started before epoch 1 finished: no inter-epoch barrier
+        assert h2.started_at < h1.finished_at
+    finally:
+        s.shutdown()
+
+
+def test_group_death_stays_excluded_across_epochs():
+    s = DynamicScheduler(groups3(), execs3(fail=2), alpha=0.5)
+    s.start()
+    try:
+        r0 = s.submit_epoch((0, 20_000)).result(timeout=30)
+        assert "cpu1" in r0.failed_groups
+        assert r0.iterations >= 20_000
+        for _ in range(2):
+            r = s.submit_epoch((0, 10_000)).result(timeout=30)
+            assert r.iterations == 10_000
+            assert "cpu1" not in r.per_group_items
+            assert not r.failed_groups
+        assert "cpu1" not in s.live_groups()
+        assert "cpu1" not in s.specs and "cpu1" not in s.executors
+    finally:
+        s.shutdown()
+
+
+def test_run_compat_tears_down_when_it_started_the_runtime():
+    s = DynamicScheduler(groups3(), execs3(), alpha=0.5)
+    res = s.run(0, 10_000)
+    assert res.iterations == 10_000
+    assert all(not th.is_alive() for th in s.dispatchers().values())
+
+
+def test_elastic_leave_removes_group_everywhere():
+    """Regression: leave() used to drop the group only from the
+    partitioner, so scheduler.specs/executors resurrected it on the next
+    epoch (or any rebuild from those dicts)."""
+    s = DynamicScheduler(groups3(), execs3(), alpha=0.5)
+    ctl = ElasticController(s)
+    s.start()
+    try:
+        assert s.submit_epoch((0, 5_000)).result(timeout=30).iterations \
+            == 5_000
+        ctl.leave("cpu1")
+        assert "cpu1" not in s.specs and "cpu1" not in s.executors
+        assert "cpu1" not in s.partitioner.groups
+        res = s.submit_epoch((0, 5_000)).result(timeout=30)
+        assert res.iterations == 5_000
+        assert "cpu1" not in res.per_group_items
+    finally:
+        s.shutdown()
+
+
+def test_epoch_window_stays_bounded():
+    """A long-running daemon submits one epoch per batch; finalized
+    epochs must be pruned once every worker is past them, or the runtime
+    leaks one handle (with its record list) per batch forever."""
+    s = DynamicScheduler(groups3(), execs3(), alpha=0.5)
+    s.start()
+    try:
+        for _ in range(12):
+            assert s.submit_epoch((0, 1_000)).result(timeout=30) \
+                .iterations == 1_000
+            assert len(s._epochs) <= 2
+    finally:
+        s.shutdown()
+
+
+def test_late_failure_requeue_is_absorbed_after_others_left():
+    """A group that fails after every other dispatcher already left the
+    epoch requeues its chunk into the epoch's space; a live dispatcher
+    must scan back and drain it (work conservation), not let the epoch
+    finalize short."""
+    from repro.core.dispatch import ChunkExecutor, ChunkFailure
+
+    class LateFailExecutor(ChunkExecutor):
+        def execute(self, token, rec):
+            time.sleep(0.25)        # the fast group exhausts the space
+            raise ChunkFailure(f"group {token.group} died late")
+
+    groups = {
+        "fast": GroupSpec("fast", DeviceKind.BIG, init_throughput=1e6,
+                          min_chunk=4),
+        "doomed": GroupSpec("doomed", DeviceKind.BIG, init_throughput=1e6,
+                            min_chunk=256),
+    }
+    execs = {"fast": SleepExecutor(rate=1e6), "doomed": LateFailExecutor()}
+    s = DynamicScheduler(groups, execs, alpha=0.5)
+    s.start()
+    try:
+        res = s.submit_epoch((0, 4_000)).result(timeout=30)
+        assert "doomed" in res.failed_groups
+        # the requeued chunk was re-executed by the survivor
+        assert res.iterations == 4_000
+        assert res.per_group_items.get("doomed", 0) == 0
+    finally:
+        s.shutdown()
+
+
+def test_completion_failure_keeps_finished_records_and_chunks():
+    """A failure inside the completion path (block/fetch of an in-flight
+    chunk) must neither drop already-finished records nor lose the chunk
+    that was popped from the pipeline when it failed."""
+    from repro.core import JaxChunkExecutor
+    from repro.core.dispatch import ChunkFailure
+    from repro.core.types import Chunk, ChunkRecord, Token
+    import numpy as np
+
+    calls = {"n": 0}
+
+    def fetch(outs):
+        calls["n"] += 1
+        if calls["n"] == 2:             # second completion dies mid-fetch
+            raise ChunkFailure("device died during fetch")
+        return float(np.asarray(outs).sum())
+
+    ex = JaxChunkExecutor(lambda x: x * 2.0,
+                          lambda tok: np.ones(tok.chunk.size, np.float32),
+                          fetch=fetch, async_depth=3)
+    toks = [Token(Chunk(i * 8, (i + 1) * 8, i), "a", DeviceKind.ACCEL)
+            for i in range(3)]
+    for tok in toks:
+        assert ex.execute(tok, ChunkRecord(tok, tc1=1.0, tc2=1.0)) == []
+    with pytest.raises(ChunkFailure):
+        ex.drain()
+    # record 0 completed before the failure: preserved, not discarded
+    done = ex.completed()
+    assert [r.token.chunk.seq for r in done] == [0]
+    # chunk 1 (popped, failed) and chunk 2 (still queued) both requeueable
+    assert sorted(c.seq for c in ex.abort()) == [1, 2]
+    assert ex.completed() == [] and ex.abort() == []
+
+
+def test_launch_failure_keeps_records_completed_in_same_call():
+    """ChunkFailure raised while *launching* a new chunk (the serve
+    engine's fail-injection path) must not discard records that completed
+    earlier in the same execute() call."""
+    from repro.core import JaxChunkExecutor
+    from repro.core.dispatch import ChunkFailure
+    from repro.core.types import Chunk, ChunkRecord, Token
+    import numpy as np
+
+    calls = {"n": 0}
+
+    def step(x):
+        calls["n"] += 1
+        if calls["n"] == 3:
+            raise ChunkFailure("device died at launch")
+        return x * 2.0
+
+    ex = JaxChunkExecutor(step,
+                          lambda tok: np.ones(tok.chunk.size, np.float32),
+                          async_depth=2)
+    toks = [Token(Chunk(i * 8, (i + 1) * 8, i), "a", DeviceKind.ACCEL)
+            for i in range(3)]
+    assert ex.execute(toks[0], ChunkRecord(toks[0], tc1=1.0, tc2=1.0)) == []
+    assert ex.execute(toks[1], ChunkRecord(toks[1], tc1=1.0, tc2=1.0)) == []
+    # third call completes chunk 0 first, then dies launching chunk 2
+    with pytest.raises(ChunkFailure):
+        ex.execute(toks[2], ChunkRecord(toks[2], tc1=1.0, tc2=1.0))
+    assert [r.token.chunk.seq for r in ex.completed()] == [0]
+    assert [c.seq for c in ex.abort()] == [1]
+
+
+def test_tc3_stamped_per_record_in_pipelined_drain():
+    """Regression: _finalize used to stamp every record drained in one
+    call with the same Tc3, inflating O_td for async_depth ≥ 2."""
+    from repro.core import JaxChunkExecutor
+    import numpy as np
+
+    ex = JaxChunkExecutor(lambda x: x * 2.0,
+                          lambda tok: np.ones(tok.chunk.size, np.float32),
+                          async_depth=4)
+    from repro.core.types import Chunk, ChunkRecord, Token
+
+    recs = []
+    for i in range(4):
+        tok = Token(Chunk(i * 8, (i + 1) * 8, i), "a", DeviceKind.ACCEL)
+        rec = ChunkRecord(tok, tc1=time.monotonic(), tc2=time.monotonic())
+        recs.extend(ex.execute(tok, rec))
+    drained = ex.drain()
+    assert len(drained) == 4
+    # each record's completion time is its own, stamped at completion:
+    # strictly increasing, after its own tg5, before the scheduler ever
+    # sees the batch
+    for r in drained:
+        assert r.tc3 >= r.tg5 > 0.0
+    tc3s = [r.tc3 for r in drained]
+    assert tc3s == sorted(tc3s) and len(set(tc3s)) == 4
