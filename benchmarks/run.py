@@ -29,17 +29,20 @@ def main() -> None:
     ap.add_argument("--only", default=None, metavar="SUBSTR",
                     help="run only benchmark suites whose function name "
                          "contains SUBSTR (e.g. batch_boundary, "
-                         "queue_saturation, fig7, realexec)")
+                         "queue_saturation, tenant_fairness, fig7, "
+                         "realexec)")
     args = ap.parse_args()
 
     from benchmarks.batch_boundary import ALL as BOUNDARY
     from benchmarks.paper_figures import ALL as PAPER
     from benchmarks.queue_saturation import ALL as QUEUE
+    from benchmarks.tenant_fairness import ALL as TENANT
 
-    suites = [fn for fn in PAPER + QUEUE + BOUNDARY
+    everything = PAPER + QUEUE + BOUNDARY + TENANT
+    suites = [fn for fn in everything
               if not args.only or args.only in fn.__name__]
     if args.only and not suites:
-        names = ", ".join(fn.__name__ for fn in PAPER + QUEUE + BOUNDARY)
+        names = ", ".join(fn.__name__ for fn in everything)
         ap.error(f"--only {args.only!r} matches no suite; available: "
                  f"{names}")
     rows = []

@@ -1,0 +1,238 @@
+"""Tenant fairness & isolation: DWRR sharded drain vs. tenant-blind queue.
+
+Three questions, all on deterministic SleepExecutors (the numbers
+characterize the arbitration layer, not model compute; aggregate capacity
+is ACCEL_RATE + CPU_RATE items/s):
+
+  * weighted fairness — two tenants with a 10:1 weight skew, both kept
+    backlogged through the whole window: does each tenant's drained-items
+    share match its weight share? Reported as Jain's fairness index over
+    the weight-normalized allocations x_t = items_t / weight_t
+    (J = (Σx)²/(n·Σx²); 1.0 = perfectly weighted-fair). The tenant-blind
+    global queue drains FIFO → ~1:1 shares → J collapses toward 0.6.
+
+  * per-tenant p95 queue delay at 0.9 offered load with arrivals split
+    10:1 — both tenants inside the envelope stay fast.
+
+  * victim isolation — an underloaded interactive tenant (5% of
+    capacity, weight 5) vs. a hostile batch tenant that dumps a backlog
+    many seconds deep at t0. Victim p95 queue delay is measured isolated,
+    under the burst with the DWRR sharded queue, and under the burst with
+    the tenant-blind queue (where victim jobs queue behind the entire
+    burst and the delay grows with backlog depth — unbounded in the
+    limit). Jobs still waiting at window end count their age as a
+    censored lower-bound delay, so the blind number cannot flatter
+    itself.
+
+Run:  PYTHONPATH=src python -m benchmarks.run --only tenant_fairness
+      PYTHONPATH=src python -m benchmarks.tenant_fairness
+"""
+from __future__ import annotations
+
+import sys
+import time
+from pathlib import Path
+from typing import Dict, List, Tuple
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.core import (DeviceKind, DynamicScheduler, GroupSpec,
+                        SleepExecutor)
+from repro.queue import (Job, JobService, JobState, QueueManager,
+                         percentiles)
+from repro.tenancy import (ShardedQueueManager, TenantAccountant,
+                           TenantRegistry)
+
+clock = time.monotonic
+
+ACCEL_RATE = 20_000.0
+CPU_RATE = 5_000.0
+CAPACITY = ACCEL_RATE + CPU_RATE
+JOB_ITEMS = 100
+QUANTUM = 64
+
+
+def _make_scheduler() -> DynamicScheduler:
+    specs = {
+        "accel": GroupSpec("accel", DeviceKind.ACCEL, fixed_chunk=512,
+                           init_throughput=ACCEL_RATE),
+        "cpu0": GroupSpec("cpu0", DeviceKind.BIG, init_throughput=CPU_RATE,
+                          min_chunk=8),
+    }
+    execs = {"accel": SleepExecutor(rate=ACCEL_RATE),
+             "cpu0": SleepExecutor(rate=CPU_RATE)}
+    return DynamicScheduler(specs, execs)
+
+
+def jain_index(xs: List[float]) -> float:
+    if not xs or all(x == 0.0 for x in xs):
+        return 0.0
+    return sum(xs) ** 2 / (len(xs) * sum(x * x for x in xs))
+
+
+# ---------------------------------------------------------------------------
+# weighted fairness under saturation, DWRR vs. tenant-blind
+# ---------------------------------------------------------------------------
+
+def _saturated_shares(sharded: bool,
+                      window_s: float = 1.0) -> Tuple[Dict[str, int], int]:
+    """Both tenants pre-backlogged past the window; drained items per
+    tenant measured over finalized batches inside the window."""
+    reg = TenantRegistry.parse("gold:weight=10,bronze:weight=1")
+    queue = ShardedQueueManager(reg, quantum=QUANTUM) if sharded \
+        else QueueManager()
+    acct = TenantAccountant(reg)
+    service = JobService(_make_scheduler, queue=queue, accountant=acct,
+                         batch_jobs=8, poll_s=0.002)
+    # ~2 windows of backlog each so neither shard empties mid-window;
+    # submissions interleave so the blind baseline's FIFO drains ~1:1
+    # (its fairest possible order) rather than whoever enqueued first
+    per_tenant = int(2.0 * window_s * CAPACITY)
+    for _ in range(per_tenant // JOB_ITEMS):
+        service.submit(Job(items=JOB_ITEMS, tenant="gold"))
+        service.submit(Job(items=JOB_ITEMS, tenant="bronze"))
+    service.start()
+    time.sleep(window_s)
+    service.close()
+    items = {t: u["items"] for t, u in acct.snapshot().items()}
+    leftover = queue.backlog_items()
+    assert leftover > 0, "window outlived the backlog; grow per_tenant"
+    return items, leftover
+
+
+def rows_weighted_fairness() -> List[Tuple[str, float, str]]:
+    reg_weights = {"gold": 10.0, "bronze": 1.0}
+    out = []
+    for mode, sharded in (("dwrr", True), ("blind", False)):
+        items, _ = _saturated_shares(sharded)
+        xs = [items.get(t, 0) / w for t, w in reg_weights.items()]
+        jain = jain_index(xs)
+        total = sum(items.values())
+        shares = ";".join(f"{t}={items.get(t, 0) / max(total, 1):.3f}"
+                          for t in reg_weights)
+        out.append((f"tenant_fairness/jain_{mode}", jain * 1e6,
+                    f"jain={jain:.4f};{shares};skew=10:1;load=saturated"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# per-tenant p95 queue delay at 0.9 offered load, arrivals split 10:1
+# ---------------------------------------------------------------------------
+
+def rows_offered_load(window_s: float = 1.2) -> List[Tuple[str, float, str]]:
+    reg = TenantRegistry.parse("gold:weight=10,bronze:weight=1")
+    queue = ShardedQueueManager(reg, quantum=QUANTUM)
+    acct = TenantAccountant(reg)
+    service = JobService(_make_scheduler, queue=queue, accountant=acct,
+                         batch_jobs=8, poll_s=0.002)
+    service.start()
+    jobs_per_s = 0.9 * CAPACITY / JOB_ITEMS
+    gap = 1.0 / jobs_per_s
+    n = int(jobs_per_s * window_s)
+    try:
+        for i in range(n):
+            # 10:1 arrival split mirrors the weight skew
+            tenant = "bronze" if i % 11 == 0 else "gold"
+            service.submit(Job(items=JOB_ITEMS, tenant=tenant))
+            time.sleep(gap)
+        deadline = clock() + 30.0
+        while clock() < deadline and queue.depth() > 0:
+            time.sleep(0.01)
+    finally:
+        service.close()
+    out = []
+    for tenant, usage in acct.snapshot().items():
+        p95 = usage["queue_delay_s"]["p95"]
+        out.append((f"tenant_fairness/p95_delay_{tenant}", p95 * 1e6,
+                    f"p95={p95 * 1e3:.2f}ms;items={usage['items']};"
+                    f"load=0.9;split=10:1"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# victim isolation under a hostile burst
+# ---------------------------------------------------------------------------
+
+VICTIM_JOBS = 24
+VICTIM_BURST = 4                      # jobs per mini-burst (interactive)
+VICTIM_GAP_S = 0.16                   # ≈5% of capacity offered
+HOSTILE_JOBS = 400                    # × JOB_ITEMS ≈ 1.6 s of capacity
+
+
+def _victim_run(queue, hostile: bool) -> Dict[str, float]:
+    """Victim p95 queue delay; jobs not yet started at window end count
+    their age (censored lower bound). Single-job batches keep the
+    pipeline-slot granularity (the floor any arrival pays while slots
+    are busy) at one job's service time for every mode."""
+    service = JobService(_make_scheduler, queue=queue, batch_jobs=1,
+                         poll_s=0.002)
+    service.start()
+    victims: List[Job] = []
+    try:
+        if hostile:
+            for _ in range(HOSTILE_JOBS):
+                service.submit(Job(items=JOB_ITEMS, tenant="hostile"))
+        for i in range(VICTIM_JOBS):
+            job = Job(items=JOB_ITEMS, tenant="victim")
+            victims.append(job)
+            service.submit(job)
+            if (i + 1) % VICTIM_BURST == 0:
+                time.sleep(VICTIM_GAP_S)
+        deadline = clock() + 10.0
+        while clock() < deadline and any(
+                j.first_started_at is None for j in victims):
+            time.sleep(0.005)
+    finally:
+        end_wall = time.time()
+        service.close()
+    delays = [(j.queue_delay if j.queue_delay is not None
+               else end_wall - j.created_at) for j in victims]
+    return percentiles(delays)
+
+
+def rows_victim_isolation() -> List[Tuple[str, float, str]]:
+    # the victim is the interactive tier: its 10× weight means that while
+    # it is backlogged a whole mini-burst drains before one hostile job
+    # interleaves, so its delay under attack stays within one hostile
+    # job's service time of the isolated run
+    reg = TenantRegistry.parse("victim:weight=10,hostile:weight=1")
+    runs = (
+        ("isolated", ShardedQueueManager(reg, quantum=QUANTUM), False),
+        ("dwrr", ShardedQueueManager(reg, quantum=QUANTUM), True),
+        ("blind", QueueManager(), True),
+    )
+    p95: Dict[str, float] = {}
+    out = []
+    for mode, queue, hostile in runs:
+        pct = _victim_run(queue, hostile)
+        p95[mode] = pct["p95"]
+        out.append((f"tenant_fairness/victim_p95_{mode}",
+                    pct["p95"] * 1e6,
+                    f"p50={pct['p50'] * 1e3:.2f}ms;"
+                    f"p95={pct['p95'] * 1e3:.2f}ms;"
+                    f"hostile_backlog_items={HOSTILE_JOBS * JOB_ITEMS}"
+                    if hostile else
+                    f"p50={pct['p50'] * 1e3:.2f}ms;"
+                    f"p95={pct['p95'] * 1e3:.2f}ms;hostile=none"))
+    iso = max(p95["isolated"], 1e-9)
+    out.append(("tenant_fairness/victim_p95_ratio_dwrr_vs_isolated",
+                (p95["dwrr"] / iso) * 1e6,
+                f"ratio={p95['dwrr'] / iso:.2f}x;target<=2x"))
+    out.append(("tenant_fairness/victim_p95_ratio_blind_vs_isolated",
+                (p95["blind"] / iso) * 1e6,
+                f"ratio={p95['blind'] / iso:.2f}x;unbounded_with_backlog"))
+    return out
+
+
+def rows_tenant_fairness() -> List[Tuple[str, float, str]]:
+    return (rows_weighted_fairness() + rows_offered_load()
+            + rows_victim_isolation())
+
+
+ALL = [rows_tenant_fairness]
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for name, us, derived in rows_tenant_fairness():
+        print(f"{name},{us:.3f},{derived}")

@@ -59,3 +59,9 @@ model = EnergyModel({"tpu": PowerSpec(200, 75), "cpu0": PowerSpec(30, 10),
                      "cpu1": PowerSpec(30, 10)})
 rep = model.energy_from_records(res.total_time, res.records)
 print(f"\nenergy {rep.total_j:.1f} J, EDP {rep.edp:.2f} J·s")
+
+# split a one-shot run's bill across consumers (for the pipelined serve
+# drain, TenantAccountant does this continuously with marginal energy)
+bill = model.attribute(rep, {"team-a": 0.75, "team-b": 0.25})
+print("attributed: " + ", ".join(f"{who} {j:.1f} J"
+                                 for who, j in sorted(bill.items())))

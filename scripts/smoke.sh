@@ -1,13 +1,17 @@
 #!/usr/bin/env bash
 # Fast contributor signal (<60s).
 # Stage 1 fails fast on the scheduler/queue core (the fast unit tests for
-# the persistent runtime, partitioner, and queue subsystem); stage 2 runs
-# everything else except the slow-marked integration / model-compile
-# tests. Full suite: `python -m pytest -q`.
+# the persistent runtime, partitioner, and queue subsystem); stage 2 is
+# the tenancy stage — a 2-tenant skewed-weight DWRR drain plus quota /
+# accounting / recovery units — so multi-tenant regressions surface
+# before the slow integration stages; stage 3 runs everything else except
+# the slow-marked integration / model-compile tests.
+# Full suite: `python -m pytest -q`.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 python -m pytest -q -x -m "not slow" \
   tests/test_scheduler.py tests/test_partitioner.py tests/test_queue.py
+python -m pytest -q -x -m "not slow" tests/test_tenancy.py
 exec python -m pytest -q -m "not slow" \
   --ignore=tests/test_scheduler.py --ignore=tests/test_partitioner.py \
-  --ignore=tests/test_queue.py "$@"
+  --ignore=tests/test_queue.py --ignore=tests/test_tenancy.py "$@"

@@ -58,3 +58,29 @@ class EnergyModel:
             busy[r.token.group] = busy.get(r.token.group, 0.0) \
                 + max(r.device_time, 0.0)
         return self.energy(total_time_s, busy)
+
+    def busy_energy_j(self, busy_s: Dict[str, float]) -> float:
+        """Active-power energy of the given busy seconds only — no idle or
+        base term. This is the *marginal* energy of a slice of work, safe
+        to sum across overlapping wall-clock windows (idle/base power is a
+        cost of the window, so charging it per overlapping batch would
+        double-bill it; see TenantAccountant)."""
+        return sum(self.specs[g].active_w * b
+                   for g, b in busy_s.items() if g in self.specs)
+
+    def attribute(self, report: EnergyReport,
+                  shares: Dict[str, float]) -> Dict[str, float]:
+        """Split a report's joules across consumers (tenants) by share.
+
+        Active, idle, and base energy are all attributed proportionally:
+        during a shared batch every tenant's work keeps the package out of
+        its low-power state, so idle/base joules are a cost of running the
+        batch at all, borne in proportion to use (the per-rail integration
+        of §4.1.1 has no finer tenant signal to offer). Shares should sum
+        to 1; they are normalized defensively if they do not.
+        """
+        total_share = sum(shares.values())
+        if total_share <= 0.0:
+            return {}
+        return {who: report.total_j * (s / total_share)
+                for who, s in shares.items()}

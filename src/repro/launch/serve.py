@@ -13,6 +13,20 @@ the persistent scheduler runtime with a double-buffered batch pipeline:
 
 ``--rebuild-per-batch`` restores the old build-run-teardown scheduler per
 batch (the benchmarks/batch_boundary.py baseline).
+
+Multi-tenant mode (requires --queue): jobs are spread round-robin across
+the tenants and drained weighted-fair with per-tenant accounting:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --reduced \\
+      --queue --requests 64 \\
+      --tenants "gold:weight=10,free:weight=1:quota=8:slo=5.0" \\
+      --power "accel=8:2,cpu0=4:1"
+
+``--tenants-file spec.json`` loads the same specs from a JSON file
+(``[{"name": ..., "weight": ..., "max_inflight": ..., "slo_delay_s": ...,
+"energy_budget_j": ...}, ...]``); ``--power group=active_w:idle_w,...``
+enables the energy model so per-tenant joules/EDP are reported and soft
+energy budgets derate DWRR weights.
 """
 from __future__ import annotations
 
@@ -21,9 +35,22 @@ import json
 
 from repro.configs.base import reduced
 from repro.configs.registry import get_config
+from repro.core.energy import EnergyModel, PowerSpec
 from repro.launch.train import parse_groups
 from repro.queue import Job
 from repro.serve.engine import HeteroServeEngine
+from repro.tenancy import TenantRegistry
+
+
+def parse_power(text: str) -> EnergyModel:
+    """``group=active_w:idle_w,...`` → EnergyModel."""
+    specs = {}
+    for tok in text.split(","):
+        name, _, watts = tok.strip().partition("=")
+        active, _, idle = watts.partition(":")
+        specs[name] = PowerSpec(active_w=float(active),
+                                idle_w=float(idle) if idle else 0.0)
+    return EnergyModel(specs)
 
 
 def main():
@@ -53,16 +80,60 @@ def main():
     ap.add_argument("--rebuild-per-batch", action="store_true",
                     help="legacy mode: fresh scheduler + dispatcher "
                          "threads per batch (benchmark baseline)")
+    ap.add_argument("--tenants", default=None,
+                    help="tenant specs for --queue mode, e.g. "
+                         "'gold:weight=10,free:weight=1:quota=8:slo=5.0'")
+    ap.add_argument("--tenants-file", default=None,
+                    help="JSON tenant spec file (alternative to --tenants)")
+    ap.add_argument("--power", default=None,
+                    help="per-group power 'group=active_w:idle_w,...' — "
+                         "enables per-tenant energy/EDP accounting")
     args = ap.parse_args()
     if args.job_items < 1:
         ap.error("--job-items must be >= 1")
     if args.requests < 1:
         ap.error("--requests must be >= 1")
+    if (args.tenants or args.tenants_file) and not args.queue:
+        ap.error("--tenants/--tenants-file require --queue")
+    if args.tenants and args.tenants_file:
+        ap.error("--tenants and --tenants-file are mutually exclusive")
+    registry = None
+    try:
+        if args.tenants:
+            registry = TenantRegistry.parse(args.tenants)
+        elif args.tenants_file:
+            registry = TenantRegistry.from_file(args.tenants_file)
+    except (ValueError, KeyError, OSError) as e:
+        ap.error(f"bad tenant spec: {e}")
+    if registry is not None and not registry.names():
+        ap.error("tenant spec defines no tenants")
+    if args.power and registry is None:
+        # per-tenant accounting is the only consumer of the energy model
+        # on this path; silently dropping it would look like a no-op run
+        ap.error("--power requires --tenants/--tenants-file")
+    try:
+        energy_model = parse_power(args.power) if args.power else None
+    except ValueError as e:
+        ap.error(f"bad --power spec: {e}")
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced(cfg)
     groups = parse_groups(args.groups)
+    if energy_model is not None:
+        # a typo'd or missing group name would silently bill that
+        # group's busy time at 0 W to every tenant
+        group_names = {g.name for g in groups}
+        unknown = set(energy_model.specs) - group_names
+        missing = group_names - set(energy_model.specs)
+        if unknown or missing:
+            problems = []
+            if unknown:
+                problems.append(f"unknown group(s) {sorted(unknown)}")
+            if missing:
+                problems.append(f"uncovered group(s) {sorted(missing)}")
+            ap.error(f"--power {'; '.join(problems)}; groups are "
+                     f"{sorted(group_names)}")
     eng = HeteroServeEngine(cfg, groups, prompt_len=args.prompt_len,
                             decode_tokens=args.decode_tokens,
                             seed=args.seed)
@@ -70,14 +141,16 @@ def main():
         # cover --requests exactly: full jobs plus a remainder job
         full, rem = divmod(args.requests, args.job_items)
         sizes = [args.job_items] * full + ([rem] if rem else [])
-        jobs = [Job(items=n, priority=i % 3)
+        names = registry.names() if registry is not None else ["default"]
+        jobs = [Job(items=n, priority=i % 3, tenant=names[i % len(names)])
                 for i, n in enumerate(sizes)]
         rep = eng.serve_jobs(jobs, slo_delay_s=args.slo,
                              batch_jobs=args.batch_jobs,
                              journal_path=args.journal,
                              pipeline_depth=args.pipeline_depth,
-                             persistent=not args.rebuild_per_batch)
-        print(json.dumps({
+                             persistent=not args.rebuild_per_batch,
+                             tenants=registry, energy_model=energy_model)
+        out = {
             "jobs": rep.jobs, "done": rep.done, "failed": rep.failed,
             "cancelled": rep.cancelled, "requeues": rep.requeues,
             "batches": rep.batches, "new_tokens": rep.new_tokens,
@@ -87,7 +160,19 @@ def main():
                               for k, v in rep.queue_delay.items()},
             "per_group": rep.per_group_items,
             "dead_groups": rep.dead_groups,
-        }, indent=2))
+        }
+        if rep.per_tenant:
+            out["per_tenant"] = {
+                t: {"items": u["items"],
+                    "busy_s": round(u["busy_s"], 4),
+                    "energy_j": round(u["energy_j"], 4),
+                    "edp": round(u["edp"], 6),
+                    "queue_delay_s": {k: round(v, 4) for k, v in
+                                      u["queue_delay_s"].items()}}
+                for t, u in rep.per_tenant.items()}
+        if rep.admission_per_tenant:
+            out["admission_per_tenant"] = rep.admission_per_tenant
+        print(json.dumps(out, indent=2))
         return
     rep = eng.serve(args.requests)
     print(json.dumps({

@@ -26,6 +26,20 @@ healthy baseline advertises only f of its λ-worth of capacity, so the
 admission gate backs off *before* the watchdog declares the group dead
 (the λ-EWMA alone reacts with the EWMA's lag; the derate is immediate
 and baseline-relative).
+
+Multi-tenant mode: with a ``registry`` (TenantRegistry) the gate becomes
+per-tenant. A job is deferred when its tenant is at its in-flight quota
+(outstanding + queued jobs ≥ max_inflight), and the delay gate projects
+the *tenant's* queue delay against the *tenant's* SLO using the tenant's
+DWRR fair-share of capacity:
+
+    delay_t ≈ (backlog_t + job.items) / (capacity · w_t / Σ_{active} w)
+
+where "active" is the set of currently backlogged tenants plus the
+candidate — so an underloaded tenant admitting into an empty shard sees
+(up to weighted contention) the full capacity, never another tenant's
+backlog (work conservation at the admission gate, mirroring the DWRR
+drain). Without a registry the legacy global gate is unchanged.
 """
 from __future__ import annotations
 
@@ -52,6 +66,7 @@ class AdmissionDecision:
     projected_delay_s: float
     capacity_items_s: float
     reason: str = ""
+    tenant: str = "default"
 
     def __bool__(self) -> bool:
         return self.decision == Decision.ADMIT
@@ -63,20 +78,32 @@ class AdmissionController:
                  ledger: Optional[OverheadLedger] = None,
                  slo_delay_s: float = 1.0,
                  defer_factor: float = 4.0,
-                 min_capacity: float = 1e-6):
+                 min_capacity: float = 1e-6,
+                 registry=None):
         self.queue = queue
         self.tracker = tracker
         self.ledger = ledger
         self.slo_delay_s = slo_delay_s
         self.defer_factor = defer_factor
         self.min_capacity = min_capacity
+        # duck-typed TenantRegistry (repro.tenancy.spec); None → tenant-
+        # blind legacy gate. Kept untyped so repro.queue never imports
+        # repro.tenancy at module scope (tenancy builds on queue).
+        self.registry = registry
         self._groups: Dict[str, float] = {}      # name -> λ seed
         self._derate: Dict[str, float] = {}      # name -> straggler factor
         self._lock = threading.Lock()
+        # serializes admit(): the quota/delay gates are check-then-act
+        # against queue state, and concurrent admits (submit vs. the
+        # service loop's retry_deferred, or recover on a live daemon)
+        # must not both pass a quota with one slot left — and the
+        # decision counters must not lose updates
+        self._admit_lock = threading.Lock()
         # counters for observability / tests
         self.admitted = 0
         self.deferred = 0
         self.rejected = 0
+        self.per_tenant: Dict[str, Dict[str, int]] = {}
 
     # -- topology events (ElasticController / scheduler failures) ------
     def on_group_join(self, name: str, lam_seed: float = 1.0) -> None:
@@ -134,26 +161,166 @@ class AdmissionController:
         backlog = self.queue.backlog_items() + extra_items
         return backlog / self.capacity_items_s()
 
+    # -- per-tenant views ----------------------------------------------
+    def _tenant_weight(self, tenant: str) -> float:
+        """The tenant's effective DWRR weight, as the queue drains it —
+        delegated so admission's fair-share model can never drift from
+        the drain's derate/floor policy."""
+        effective = getattr(self.queue, "effective_weight", None)
+        if effective is not None:
+            return effective(tenant)
+        return max(1e-9, self.registry.get(tenant).weight)
+
+    def tenant_capacity_items_s(self, tenant: str) -> float:
+        """The tenant's DWRR fair-share of aggregate useful capacity:
+        full capacity when no other tenant is backlogged, its weight share
+        among backlogged tenants otherwise."""
+        cap = self.capacity_items_s()
+        if self.registry is None:
+            return cap
+        by_tenant = getattr(self.queue, "backlog_by_tenant", None)
+        if by_tenant is None:                # unsharded queue: no view
+            return cap
+        active = {t for t, b in by_tenant().items() if b > 0}
+        active.add(tenant)
+        wsum = sum(self._tenant_weight(t) for t in active)
+        return max(cap * self._tenant_weight(tenant) / wsum,
+                   self.min_capacity)
+
+    def _tenant_backlog_items(self, tenant: str) -> int:
+        if self.registry is not None \
+                and hasattr(self.queue, "backlog_by_tenant"):
+            return self.queue.backlog_items(tenant)
+        return self.queue.backlog_items()
+
+    def tenant_projected_delay_s(self, tenant: str,
+                                 extra_items: int = 0) -> float:
+        return (self._tenant_backlog_items(tenant) + extra_items) \
+            / self.tenant_capacity_items_s(tenant)
+
+    _COUNTER = {Decision.ADMIT: "admitted", Decision.DEFER: "deferred",
+                Decision.REJECT: "rejected"}
+
+    def _count(self, tenant: str, decision: Decision) -> None:
+        bucket = self.per_tenant.setdefault(
+            tenant, {"admitted": 0, "deferred": 0, "rejected": 0})
+        bucket[self._COUNTER[decision]] += 1
+
+    def _tenant_quota_free(self, job: Job) -> bool:
+        """True while the tenant's unfinished admitted work (popped but
+        unfinished + still queued) stays under its in-flight quota. The
+        queued() view excludes popped jobs (which stay ADMITTED until
+        mark_running) so work in the pop-to-dispatch window is not
+        counted against the quota twice."""
+        spec = self.registry.get(job.tenant)
+        if spec.max_inflight is None:
+            return True
+        unfinished_fn = getattr(self.queue, "unfinished", None)
+        if unfinished_fn is not None:
+            # one atomic snapshot — a concurrent pop moving a job from
+            # queued to popped between two separate reads would make the
+            # gate undercount and admit past the quota
+            unfinished = unfinished_fn(job.tenant)
+        else:
+            # unsharded queue: count THIS tenant's live jobs directly —
+            # another tenant's backlog must never consume this tenant's
+            # quota (and its own RUNNING jobs must)
+            unfinished = sum(1 for j in self.queue.jobs()
+                             if j.tenant == job.tenant
+                             and j.state in (JobState.ADMITTED,
+                                             JobState.RUNNING))
+        return unfinished < spec.max_inflight
+
+    def shed_deferred(self, job: Job) -> None:
+        """Reclassify one DEFERred job as rejected — the service calls
+        this when it sheds a deferred job (pool at capacity) so the
+        counters report the job's final outcome, not the gate's initial
+        answer."""
+        with self._admit_lock:
+            self.deferred -= 1
+            self.rejected += 1
+            if self.registry is not None:
+                bucket = self.per_tenant.get(job.tenant)
+                if bucket is not None:
+                    bucket["deferred"] -= 1
+                    bucket["rejected"] += 1
+
     # -- the gate ------------------------------------------------------
     def admit(self, job: Job) -> AdmissionDecision:
         """Decide on a PENDING job; ADMIT enqueues it, REJECT cancels it,
-        DEFER leaves it PENDING for the caller to retry."""
-        cap = self.capacity_items_s()
-        delay = (self.queue.backlog_items() + job.items) / cap
-        if delay <= self.slo_delay_s:
-            self.queue.put(job)
-            self.admitted += 1
-            return AdmissionDecision(Decision.ADMIT, delay, cap)
-        if delay <= self.defer_factor * self.slo_delay_s:
-            self.deferred += 1
-            return AdmissionDecision(
-                Decision.DEFER, delay, cap,
-                reason=f"projected delay {delay:.3f}s > SLO "
-                       f"{self.slo_delay_s:.3f}s")
+        DEFER leaves it PENDING for the caller to retry. With a tenant
+        registry the delay gate is per-tenant (fair-share capacity vs. the
+        tenant's own SLO) and an in-flight quota breach defers."""
+        with self._admit_lock:
+            return self._admit_locked(job)
+
+    def _admit_locked(self, job: Job) -> AdmissionDecision:
+        if self.registry is None:
+            return self._gate(job, self.capacity_items_s(),
+                              self.queue.backlog_items(),
+                              self.slo_delay_s, prefix="")
+        spec = self.registry.get(job.tenant)
+        cap_t = self.tenant_capacity_items_s(job.tenant)
+        slo = spec.slo_delay_s if spec.slo_delay_s is not None \
+            else self.slo_delay_s
+        if not self._tenant_quota_free(job):
+            delay = (self._tenant_backlog_items(job.tenant) + job.items) \
+                / cap_t
+            at_quota = f"tenant {job.tenant} at in-flight quota " \
+                       f"{spec.max_inflight}"
+            # the reject band still applies at quota — otherwise a flood
+            # against a capped tenant is deferred forever and the
+            # deferred pool (re-gated every service poll) grows without
+            # bound instead of being shed like the tenant-blind gate does
+            if delay > self.defer_factor * slo:
+                return self._reject(
+                    job, delay, cap_t,
+                    f"{at_quota} and projected delay {delay:.3f}s > "
+                    f"{self.defer_factor:.1f}×SLO")
+            return self._defer(job, delay, cap_t, at_quota)
+        return self._gate(job, cap_t,
+                          self._tenant_backlog_items(job.tenant), slo,
+                          prefix=f"tenant {job.tenant} ")
+
+    # shared decision bookkeeping: counters, per-tenant counters (registry
+    # mode only), lifecycle transition and rejection metadata live here so
+    # the global gate, the per-tenant gate, and the quota branch cannot
+    # drift apart
+    def _defer(self, job: Job, delay: float, cap: float,
+               reason: str) -> AdmissionDecision:
+        self.deferred += 1
+        if self.registry is not None:
+            self._count(job.tenant, Decision.DEFER)
+        return AdmissionDecision(Decision.DEFER, delay, cap,
+                                 tenant=job.tenant, reason=reason)
+
+    def _reject(self, job: Job, delay: float, cap: float,
+                reason: str) -> AdmissionDecision:
         job.meta["rejected_delay_s"] = delay
         job.transition(JobState.CANCELLED)
         self.rejected += 1
-        return AdmissionDecision(
-            Decision.REJECT, delay, cap,
-            reason=f"projected delay {delay:.3f}s > "
-                   f"{self.defer_factor:.1f}×SLO")
+        if self.registry is not None:
+            self._count(job.tenant, Decision.REJECT)
+        return AdmissionDecision(Decision.REJECT, delay, cap,
+                                 tenant=job.tenant, reason=reason)
+
+    def _gate(self, job: Job, cap: float, backlog: int, slo: float,
+              prefix: str) -> AdmissionDecision:
+        """The three-band ADMIT/DEFER/REJECT ladder, shared by the legacy
+        global gate and the per-tenant gate (which differ only in which
+        capacity/backlog/SLO feed it)."""
+        delay = (backlog + job.items) / cap
+        if delay <= slo:
+            self.queue.put(job)
+            self.admitted += 1
+            if self.registry is not None:
+                self._count(job.tenant, Decision.ADMIT)
+            return AdmissionDecision(Decision.ADMIT, delay, cap,
+                                     tenant=job.tenant)
+        if delay <= self.defer_factor * slo:
+            return self._defer(job, delay, cap,
+                               f"{prefix}projected delay {delay:.3f}s "
+                               f"> SLO {slo:.3f}s")
+        return self._reject(job, delay, cap,
+                            f"{prefix}projected delay {delay:.3f}s > "
+                            f"{self.defer_factor:.1f}×SLO")

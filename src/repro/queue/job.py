@@ -78,6 +78,11 @@ class Job:
     def __post_init__(self):
         if self.items <= 0:
             raise ValueError(f"job {self.job_id}: items must be > 0")
+        if not self.tenant:
+            # the tenant is a routing key (queue shard, DWRR weight,
+            # accounting bucket) — an empty one would silently create a
+            # phantom shard
+            raise ValueError(f"job {self.job_id}: tenant must be non-empty")
         if isinstance(self.state, str) and not isinstance(self.state,
                                                           JobState):
             self.state = JobState(self.state)

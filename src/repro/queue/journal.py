@@ -13,6 +13,7 @@ as re-queueable jobs; terminal jobs come back as history.
 from __future__ import annotations
 
 import json
+import logging
 import os
 import threading
 import time
@@ -20,17 +21,36 @@ from typing import Dict, List, Optional, Tuple
 
 from repro.queue.job import Job, JobState
 
+logger = logging.getLogger(__name__)
+
 _TRUNCATE_SENTINEL = object()
 
 
 class JournalStore:
-    def __init__(self, path: str, fsync: bool = False):
+    def __init__(self, path: str, fsync: bool = False,
+                 auto_compact_lines: Optional[int] = None):
+        """``auto_compact_lines``: when set, record() triggers compact()
+        once the journal holds at least that many lines — a long-lived
+        daemon's journal stays O(live+finished jobs) instead of O(state
+        transitions) with no operator cron job. None disables it."""
         self.path = str(path)
         self.fsync = fsync
+        self.auto_compact_lines = auto_compact_lines
+        self.compactions = 0                 # observability / tests
         self._lock = threading.Lock()
         directory = os.path.dirname(self.path)
         if directory:
             os.makedirs(directory, exist_ok=True)
+        self._lines = 0
+        # the line count only feeds the auto-compaction trigger; don't
+        # pay an O(journal) scan on open when the feature is off
+        if auto_compact_lines is not None and os.path.exists(self.path):
+            with open(self.path, "r", encoding="utf-8") as fh:
+                self._lines = sum(1 for _ in fh)
+        # moving trigger: after a compaction that keeps k lines the next
+        # one fires at max(threshold, 2k), so a journal whose *live* set
+        # exceeds the threshold cannot thrash a full rewrite per record
+        self._next_compact = auto_compact_lines
         self._fh = open(self.path, "a", encoding="utf-8")
 
     # -- write path ----------------------------------------------------
@@ -43,6 +63,22 @@ class JournalStore:
             self._fh.flush()
             if self.fsync:
                 os.fsync(self._fh.fileno())
+            self._lines += 1
+            over = self._next_compact is not None \
+                and self._lines >= self._next_compact
+        if over:
+            # outside the lock: compact() re-acquires it; a concurrent
+            # second trigger just runs a cheap no-op rewrite. The record
+            # itself is already durable — a failing compaction must not
+            # take journaling (and the drain daemon above it) down with
+            # it, so the trigger is disabled and appends continue
+            try:
+                self.compact()
+            except OSError:
+                logger.exception("journal auto-compaction failed; "
+                                 "disabling the trigger")
+                with self._lock:
+                    self._next_compact = None
 
     def close(self) -> None:
         with self._lock:
@@ -58,24 +94,34 @@ class JournalStore:
         before it is dead weight. The rewrite goes to a temp file that is
         atomically renamed over the journal (a crash mid-compaction leaves
         either the old or the new file, never a mix); the append handle is
-        reopened on the compacted file. Returns the number of jobs kept.
+        reopened on the compacted file — or, if the rewrite fails, on the
+        untouched original, so journaling survives a failed compaction
+        (e.g. ENOSPC on the temp file). Returns the number of jobs kept.
         """
         with self._lock:
             if not self._fh.closed:
                 self._fh.close()
-            jobs = self.replay(self.path)
-            tmp = self.path + ".compact"
-            with open(tmp, "w", encoding="utf-8") as fh:
-                for job in sorted(jobs.values(),
-                                  key=lambda j: (j.created_at, j.job_id)):
-                    fh.write(json.dumps(
-                        {"ts": time.time(), "event": job.state.value,
-                         "job": job.to_dict()}, sort_keys=True) + "\n")
-                fh.flush()
-                if self.fsync:
-                    os.fsync(fh.fileno())
-            os.replace(tmp, self.path)
-            self._fh = open(self.path, "a", encoding="utf-8")
+            try:
+                jobs = self.replay(self.path)
+                tmp = self.path + ".compact"
+                with open(tmp, "w", encoding="utf-8") as fh:
+                    for job in sorted(jobs.values(),
+                                      key=lambda j: (j.created_at,
+                                                     j.job_id)):
+                        fh.write(json.dumps(
+                            {"ts": time.time(), "event": job.state.value,
+                             "job": job.to_dict()}, sort_keys=True) + "\n")
+                    fh.flush()
+                    if self.fsync:
+                        os.fsync(fh.fileno())
+                os.replace(tmp, self.path)
+            finally:
+                self._fh = open(self.path, "a", encoding="utf-8")
+            self._lines = len(jobs)
+            if self.auto_compact_lines is not None:
+                self._next_compact = max(self.auto_compact_lines,
+                                         2 * len(jobs))
+            self.compactions += 1
             return len(jobs)
 
     def __enter__(self) -> "JournalStore":

@@ -94,6 +94,19 @@ class QueueManager:
                 return job
         return None
 
+    def peek(self) -> Optional[Job]:
+        """Highest-priority ADMITTED job without removing it (stale heap
+        entries for cancelled/evicted jobs are dropped on the way) — the
+        DWRR drain needs the head job's cost before deciding to serve it."""
+        with self._lock:
+            while self._heap:
+                _, _, job_id = self._heap[0]
+                job = self._jobs.get(job_id)
+                if job is not None and job.state == JobState.ADMITTED:
+                    return job
+                heapq.heappop(self._heap)
+            return None
+
     def mark_running(self, job: Job, group: str = "*") -> None:
         with self._lock:
             job.transition(JobState.RUNNING)

@@ -42,7 +42,7 @@ from repro.core.scheduler import DynamicScheduler, EpochHandle, \
 from repro.core.types import IterationSpace
 from repro.queue.admission import AdmissionController, AdmissionDecision, \
     Decision
-from repro.queue.job import Job, JobState
+from repro.queue.job import IllegalTransition, Job, JobState
 from repro.queue.journal import JournalStore
 from repro.queue.manager import QueueManager
 
@@ -135,7 +135,8 @@ class JobService:
                  watchdog: Optional["Watchdog"] = None,
                  on_group_failed: Optional[Callable[[str], None]] = None,
                  pipeline_depth: int = 2, persistent: bool = True,
-                 straggler: Optional["StragglerDetector"] = None):
+                 straggler: Optional["StragglerDetector"] = None,
+                 accountant=None, max_deferred: int = 10_000):
         self.make_scheduler = make_scheduler
         self.queue = queue or QueueManager()
         self.admission = admission
@@ -147,6 +148,15 @@ class JobService:
         self.pipeline_depth = max(1, pipeline_depth)
         self.persistent = persistent
         self.straggler = straggler
+        # duck-typed repro.tenancy.TenantAccountant: attributes each
+        # finalized batch's busy time / joules to tenants and feeds soft
+        # energy-budget weight derates back into a sharded queue (kept
+        # untyped so repro.queue never imports repro.tenancy)
+        self.accountant = accountant
+        # ceiling on the deferred pool: every deferred job is re-gated
+        # each poll, so an unbounded pool is both a memory leak and O(n)
+        # lock-held work per loop — beyond the cap, DEFER becomes REJECT
+        self.max_deferred = max_deferred
         self.stats = ServiceStats()
         self._deferred: List[Job] = []
         self._lock = threading.Lock()
@@ -172,7 +182,19 @@ class JobService:
         dec = self.admission.admit(job)
         if dec.decision == Decision.DEFER:
             with self._lock:
-                self._deferred.append(job)
+                full = len(self._deferred) >= self.max_deferred
+                if not full:
+                    self._deferred.append(job)
+            if full:                        # shed: a flood (e.g. against
+                job.meta["rejected_delay_s"] = dec.projected_delay_s
+                job.transition(JobState.CANCELLED)   # a quota-capped
+                self.admission.shed_deferred(job)    # tenant) must not
+                self._journal(job, "rejected")       # bank unboundedly
+                return AdmissionDecision(
+                    Decision.REJECT, dec.projected_delay_s,
+                    dec.capacity_items_s, tenant=job.tenant,
+                    reason=f"deferred pool at capacity "
+                           f"({self.max_deferred})")
         self._journal(job, "rejected" if dec.decision == Decision.REJECT
                       else None)
         return dec
@@ -195,6 +217,41 @@ class JobService:
                 self._journal(job)
                 admitted += dec.decision == Decision.ADMIT
         return admitted
+
+    # -- replay-driven restart -----------------------------------------
+    def recover(self, journal_path: str) -> List[Job]:
+        """Rebuild queue state from a crashed process's journal into THIS
+        (live) service: in-flight jobs of the dead process re-enter the
+        queue — routed to their tenant's shard when the queue is sharded —
+        and PENDING jobs get a fresh admission decision. Safe to call
+        while the drain daemon is running (the queue is thread-safe and
+        the daemon simply starts popping recovered work). Returns the
+        re-materialized jobs; terminal history stays in the journal.
+
+        A RUNNING job at crash time comes back REQUEUED (its attempt died
+        with the process — at-least-once, bounded by max_attempts); the
+        per-tenant in-flight view starts clean because nothing recovered
+        is actually on a scheduler yet.
+        """
+        to_requeue, _ = JournalStore.recover(journal_path)
+        restored: List[Job] = []
+        for job in to_requeue:
+            if job.state == JobState.REQUEUED:
+                if job.attempts_left <= 0:
+                    job.transition(JobState.FAILED)
+                    self.stats.failed += 1
+                    self._journal(job, "recovery-exhausted")
+                    continue
+                self.queue.requeue(job)
+            elif job.state == JobState.ADMITTED:
+                self.queue.put(job)
+            else:                              # PENDING: re-gate it
+                self.submit(job)
+                restored.append(job)
+                continue
+            self._journal(job, "recovered")
+            restored.append(job)
+        return restored
 
     # -- the persistent runtime ----------------------------------------
     def _scheduler(self) -> DynamicScheduler:
@@ -246,11 +303,22 @@ class JobService:
     def _submit_batch(self, jobs: List[Job]) -> Optional[BatchReport]:
         """Mark a batch RUNNING and submit its epoch. On submit failure the
         batch is finalized immediately (returns its report); otherwise it
-        joins the in-flight pipeline and None is returned."""
-        total = sum(j.items for j in jobs)
+        joins the in-flight pipeline and None is returned. Jobs cancelled
+        in the pop-to-dispatch window (two-phase pop leaves them ADMITTED
+        and cancellable) are dropped here, not crashed on."""
+        live = []
         for j in jobs:
-            self.queue.mark_running(j)
+            try:
+                self.queue.mark_running(j)
+            except IllegalTransition:       # cancelled while popped
+                self._journal(j)
+                continue
             self._journal(j)
+            live.append(j)
+        if not live:
+            return None
+        jobs = live
+        total = sum(j.items for j in jobs)
         ib = _InflightBatch(jobs=jobs, total=total, submitted_at=clock())
         if not self.persistent:
             return self._run_batch_sync(ib)
@@ -302,12 +370,28 @@ class JobService:
         # the space), so a partial count cannot be attributed to specific
         # jobs — never mark a job DONE whose items may not have run
         done = completed >= ib.total
+
+        # per-tenant attribution + soft energy-budget weight derating
+        # (before job finalization so the very next DWRR pop sees it).
+        # Completed batches only: a failed batch's jobs requeue and run
+        # again in full, so attributing the failed attempt too would
+        # double-count the tenant's items and inflate its fairness share
+        if self.accountant is not None and res is not None and done:
+            self.accountant.record_batch(ib.jobs, res,
+                                         window=(ib.submitted_at, clock()))
+            derates = self.accountant.derate_weights()
+            set_derates = getattr(self.queue, "set_weight_derates", None)
+            if set_derates is not None:
+                set_derates(derates)
         for j in ib.jobs:
             if done:
                 self.queue.mark_finished(j, JobState.DONE)
                 self.stats.done += 1
                 if j.queue_delay is not None:
                     self.stats.queue_delays.append(j.queue_delay)
+                    if self.accountant is not None:
+                        self.accountant.record_queue_delay(j.tenant,
+                                                           j.queue_delay)
             elif j.attempts_left > 0:
                 self.queue.mark_finished(j, JobState.REQUEUED)
                 self.queue.requeue(j)
@@ -363,6 +447,8 @@ class JobService:
         rep = self._submit_batch(jobs)
         if rep is not None:
             return rep
+        if not self._inflight:              # whole batch cancelled in the
+            return None                     # pop-to-dispatch window
         ib = self._inflight.popleft()
         ib.handle.wait()
         return self._finalize_batch(ib)

@@ -20,9 +20,12 @@ import numpy as np
 from repro.configs.base import LMConfig
 from repro.core import (ChunkRecord, DeviceKind, DynamicScheduler, GroupSpec,
                         JaxChunkExecutor, OverheadLedger, ThroughputTracker)
+from repro.core.energy import EnergyModel
 from repro.models import model as M
 from repro.queue import (AdmissionController, Job, JobService, JournalStore,
                          QueueManager, percentiles)
+from repro.tenancy import (ShardedQueueManager, TenantAccountant,
+                           TenantRegistry)
 from repro.train.trainer import GroupDef, bucket
 
 
@@ -52,6 +55,11 @@ class QueueServeReport:
     throughput: Dict[str, float]
     dead_groups: List[str] = field(default_factory=list)
     drained: bool = True
+    # multi-tenant mode: per-tenant attributed usage (items, busy_s,
+    # energy_j, edp, queue-delay percentiles) + admission counters
+    per_tenant: Dict[str, Dict] = field(default_factory=dict)
+    admission_per_tenant: Dict[str, Dict[str, int]] = \
+        field(default_factory=dict)
 
 
 class HeteroServeEngine:
@@ -192,7 +200,10 @@ class HeteroServeEngine:
                    journal_path: Optional[str] = None,
                    timeout_s: float = 300.0,
                    pipeline_depth: int = 2,
-                   persistent: bool = True) -> QueueServeReport:
+                   persistent: bool = True,
+                   tenants: Optional[TenantRegistry] = None,
+                   energy_model: Optional[EnergyModel] = None) \
+            -> QueueServeReport:
         """Serve prioritized jobs through admission control + queue.
 
         Batches drain onto one *persistent* scheduler runtime: dispatcher
@@ -207,6 +218,13 @@ class HeteroServeEngine:
         (every job is queued). Groups that die mid-run stay excluded for
         the rest of the session. ``persistent=False`` restores the old
         rebuild-per-batch behavior (benchmark baseline).
+
+        Multi-tenant mode: pass a ``tenants`` registry and jobs are
+        sharded per ``job.tenant`` with a DWRR weighted-fair drain,
+        quota-aware admission (when an SLO enables the gate), and
+        per-tenant accounting; with an ``energy_model`` each tenant's
+        attributed joules/EDP are reported and soft energy budgets derate
+        DWRR weights. Without a registry nothing changes.
         """
         tracker = ThroughputTracker(self.alpha)
         ledger = OverheadLedger()
@@ -221,11 +239,25 @@ class HeteroServeEngine:
             sched.ledger = ledger
             return sched
 
-        queue = QueueManager()
+        accountant = None
+        if tenants is not None:
+            queue = ShardedQueueManager(tenants)
+            accountant = TenantAccountant(tenants,
+                                          energy_model=energy_model)
+        else:
+            queue = QueueManager()
         admission = None
-        if slo_delay_s is not None:
-            admission = AdmissionController(queue, tracker, ledger,
-                                            slo_delay_s=slo_delay_s)
+        # the gate also turns on when any tenant spec carries an SLO or
+        # quota — otherwise those contracts would be silently inert
+        # without a global --slo; with no global SLO the global delay
+        # band is infinite and only the per-tenant contracts bind
+        if slo_delay_s is not None or (tenants is not None
+                                       and tenants.any_gating()):
+            admission = AdmissionController(
+                queue, tracker, ledger,
+                slo_delay_s=slo_delay_s if slo_delay_s is not None
+                else float("inf"),
+                registry=tenants)
             for g in self.groups:
                 admission.on_group_join(g.name, 1.0)
         journal = JournalStore(journal_path) if journal_path else None
@@ -234,7 +266,8 @@ class HeteroServeEngine:
                              batch_jobs=batch_jobs,
                              on_group_failed=dead.add,
                              pipeline_depth=pipeline_depth,
-                             persistent=persistent)
+                             persistent=persistent,
+                             accountant=accountant)
         t0 = time.monotonic()
         for job in jobs:
             service.submit(job)
@@ -253,4 +286,7 @@ class HeteroServeEngine:
             queue_delay=percentiles(st.queue_delays),
             per_group_items=dict(st.per_group_items),
             throughput=tracker.snapshot(), dead_groups=sorted(dead),
-            drained=drained)
+            drained=drained,
+            per_tenant=accountant.snapshot() if accountant else {},
+            admission_per_tenant=dict(admission.per_tenant)
+            if admission is not None else {})

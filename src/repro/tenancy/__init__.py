@@ -1,0 +1,21 @@
+"""Multi-tenant scheduling: sharded queues, weighted-fair drain, quotas,
+per-tenant energy/EDP accounting.
+
+The queue subsystem (`repro.queue`) arbitrates *jobs*; this package
+arbitrates *tenants* on top of it: a TenantRegistry holds each tenant's
+contract (DWRR weight, in-flight quota, queue-delay SLO, soft energy
+budget), a ShardedQueueManager drains one QueueManager shard per tenant
+in deficit-weighted-round-robin order, and a TenantAccountant attributes
+each drained batch's busy time and joules back to tenants — closing the
+loop by derating the weight of tenants past their energy budget. With a
+single (default) tenant every piece degenerates to the unsharded PR 3
+behavior.
+"""
+from repro.tenancy.spec import (DEFAULT_TENANT, TenantRegistry, TenantSpec)
+from repro.tenancy.sharded_queue import ShardedQueueManager
+from repro.tenancy.accounting import TenantAccountant, TenantUsage
+
+__all__ = [
+    "DEFAULT_TENANT", "TenantRegistry", "TenantSpec",
+    "ShardedQueueManager", "TenantAccountant", "TenantUsage",
+]
