@@ -1,0 +1,122 @@
+"""Dispatch hot-path overhead: lock-per-token vs. range/steal partitioner.
+
+The paper's thesis is that host-side per-chunk costs (scheduling critical
+section, dispatch, synchronous waits) dominate dynamic-scheduling overhead
+as worker count grows. This benchmark measures exactly that on the real
+threaded runtime with zero-service SleepExecutors (``rate=inf`` → every
+sleep is skipped → dispatchers hammer the partitioner at full speed, the
+worst-case contention pattern):
+
+  * per-chunk host overhead — mean((Tc2−Tc1) + max(Tc3−Tg5, 0)): Filter₁
+    grant latency (including any lock wait) plus host-resume latency
+  * global-lock wait — the partitioner's instrumented lock-wait total
+    (every token grant in ``chunk_mode="paper"``; refill/steal only in
+    ``chunk_mode="range"``)
+
+for worker counts 2/4/8, old path (``paper``: one global lock per token,
+record-at-a-time finalize) vs. new path (``range``: private λ-share
+ranges + work stealing, batched finalize).
+
+The two paths must agree on the *schedule result*: identical iteration
+coverage (work conservation) and consistent per-group accounting — any
+mismatch raises, which is what makes the ``--quick`` profile a smoke-test
+stage and not just a timer.
+
+Run:  PYTHONPATH=src python -m benchmarks.run --only dispatch_overhead
+      PYTHONPATH=src python -m benchmarks.dispatch_overhead
+"""
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+from typing import Dict, List, Tuple
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.core import (DeviceKind, DynamicScheduler, GroupSpec,
+                        ScheduleResult, SleepExecutor)
+
+WORKERS = (2, 4, 8)
+ITEMS = 120_000
+QUICK_WORKERS = (2, 8)
+QUICK_ITEMS = 12_000
+BASE_QUANTUM = 64                     # ~ITEMS/64 chunks: dense host traffic
+
+
+def _build(n_workers: int, chunk_mode: str) -> DynamicScheduler:
+    groups = {
+        f"g{i}": GroupSpec(f"g{i}", DeviceKind.BIG, init_throughput=1.0,
+                           min_chunk=8)
+        for i in range(n_workers)}
+    execs = {name: SleepExecutor(rate=float("inf")) for name in groups}
+    return DynamicScheduler(groups, execs, alpha=0.5,
+                            base_quantum=BASE_QUANTUM, chunk_mode=chunk_mode)
+
+
+def _run_one(n_workers: int, items: int, chunk_mode: str) \
+        -> Tuple[ScheduleResult, float, Dict[str, float]]:
+    sched = _build(n_workers, chunk_mode)
+    res = sched.run(0, items)
+    recs = res.records
+    if not recs:
+        raise RuntimeError(f"{chunk_mode}/w{n_workers}: no records")
+    host = sum((r.tc2 - r.tc1) + max(r.tc3 - r.tg5, 0.0) for r in recs) \
+        / len(recs)
+    return res, host, sched.partitioner.contention_stats()
+
+
+def _check_schedule(res: ScheduleResult, items: int, label: str) -> None:
+    """ScheduleResult semantics both paths must satisfy; raises on a
+    violation so a hot-path regression fails the smoke run outright."""
+    if res.iterations != items:
+        raise RuntimeError(
+            f"{label}: covered {res.iterations} of {items} iterations "
+            f"(work conservation violated)")
+    if sum(res.per_group_items.values()) != res.iterations:
+        raise RuntimeError(f"{label}: per-group accounting mismatch")
+    if len(res.records) == 0 or res.failed_groups:
+        raise RuntimeError(f"{label}: unexpected records/failed_groups")
+    covered = sum(r.token.chunk.size for r in res.records)
+    if covered != res.iterations:
+        raise RuntimeError(
+            f"{label}: record chunks cover {covered} != {res.iterations}")
+
+
+def _rows(workers, items) -> List[Tuple[str, float, str]]:
+    out: List[Tuple[str, float, str]] = []
+    for w in workers:
+        per_mode: Dict[str, float] = {}
+        for mode in ("paper", "range"):
+            res, host, lock = _run_one(w, items, mode)
+            _check_schedule(res, items, f"dispatch_overhead/{mode}/w{w}")
+            per_mode[mode] = host
+            derived = (f"lock_wait_ms={lock['lock_wait_s'] * 1e3:.3f};"
+                       f"lock_acquires={int(lock['lock_acquires'])};"
+                       f"chunks={len(res.records)};"
+                       f"wall_ms={res.total_time * 1e3:.2f};items={items}")
+            out.append((f"dispatch_overhead/{mode}/w{w}", host * 1e6,
+                        derived))
+        ratio = per_mode["paper"] / max(per_mode["range"], 1e-12)
+        out.append((f"dispatch_overhead/speedup/w{w}", ratio,
+                    f"paper_over_range_host_overhead=x{ratio:.2f}"))
+    return out
+
+
+def rows_dispatch_overhead() -> List[Tuple[str, float, str]]:
+    return _rows(WORKERS, ITEMS)
+
+
+def rows_dispatch_overhead_quick() -> List[Tuple[str, float, str]]:
+    """Tiny profile for scripts/smoke.sh: same old/new schedule-result
+    cross-check, sizes small enough for every smoke pass."""
+    return _rows(QUICK_WORKERS, QUICK_ITEMS)
+
+
+ALL = [rows_dispatch_overhead]
+QUICK = [rows_dispatch_overhead_quick]
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for name, us, derived in rows_dispatch_overhead():
+        print(f"{name},{us:.3f},{derived}")

@@ -30,15 +30,24 @@ def main() -> None:
                     help="run only benchmark suites whose function name "
                          "contains SUBSTR (e.g. batch_boundary, "
                          "queue_saturation, tenant_fairness, fig7, "
-                         "realexec)")
+                         "dispatch_overhead, realexec)")
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny-size smoke profile: runs only the suites "
+                         "with a quick variant (dispatch_overhead, which "
+                         "fails hard on an old/new schedule-result "
+                         "mismatch) — wired into scripts/smoke.sh")
     args = ap.parse_args()
 
     from benchmarks.batch_boundary import ALL as BOUNDARY
+    from benchmarks.dispatch_overhead import ALL as DISPATCH, \
+        QUICK as DISPATCH_QUICK
     from benchmarks.paper_figures import ALL as PAPER
     from benchmarks.queue_saturation import ALL as QUEUE
     from benchmarks.tenant_fairness import ALL as TENANT
 
-    everything = PAPER + QUEUE + BOUNDARY + TENANT
+    everything = PAPER + QUEUE + BOUNDARY + TENANT + DISPATCH
+    if args.quick:
+        everything = DISPATCH_QUICK
     suites = [fn for fn in everything
               if not args.only or args.only in fn.__name__]
     if args.only and not suites:

@@ -4,14 +4,19 @@
 # the persistent runtime, partitioner, and queue subsystem); stage 2 is
 # the tenancy stage — a 2-tenant skewed-weight DWRR drain plus quota /
 # accounting / recovery units — so multi-tenant regressions surface
-# before the slow integration stages; stage 3 runs everything else except
-# the slow-marked integration / model-compile tests.
+# before the slow integration stages; stage 3 is the dispatch-overhead
+# benchmark in its tiny --quick profile, which fails hard on a
+# schedule-result mismatch between the lock-per-token and range/steal
+# hot paths; stage 4 runs everything else except the slow-marked
+# integration / model-compile tests.
 # Full suite: `python -m pytest -q`.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 python -m pytest -q -x -m "not slow" \
-  tests/test_scheduler.py tests/test_partitioner.py tests/test_queue.py
+  tests/test_scheduler.py tests/test_partitioner.py tests/test_queue.py \
+  tests/test_dispatch_hotpath.py
 python -m pytest -q -x -m "not slow" tests/test_tenancy.py
+python -m benchmarks.run --quick
 exec python -m pytest -q -m "not slow" \
   --ignore=tests/test_scheduler.py --ignore=tests/test_partitioner.py \
   --ignore=tests/test_queue.py --ignore=tests/test_tenancy.py "$@"

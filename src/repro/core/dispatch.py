@@ -103,11 +103,21 @@ class JaxChunkExecutor(ChunkExecutor):
     fetch(outputs) -> small host metrics (device-to-host phase)
     """
 
+    #: bounded-backoff schedule for the readiness poll: a few free yields
+    #: first (completion is usually imminent), then exponential sleeps
+    #: capped so a long kernel costs at most POLL_MAX_S of detection lag
+    POLL_MIN_S = 5e-5
+    POLL_MAX_S = 1e-3
+
     def __init__(self, step: Callable, make_inputs: Callable[[Token], Any],
                  fetch: Optional[Callable[[Any], Any]] = None,
                  device=None, async_depth: int = 1,
-                 priority_boost: bool = False):
+                 priority_boost: bool = False,
+                 completion_mode: str = "poll"):
         import jax
+        if completion_mode not in ("poll", "block"):
+            raise ValueError(f"completion_mode must be 'poll' or 'block', "
+                             f"got {completion_mode!r}")
         self.jax = jax
         self.step = step
         self.make_inputs = make_inputs
@@ -115,19 +125,62 @@ class JaxChunkExecutor(ChunkExecutor):
         self.device = device
         self.async_depth = max(1, async_depth)
         self.priority_boost = priority_boost
+        self.completion_mode = completion_mode
         self.boosted = False
         self._inflight: Deque[Tuple[ChunkRecord, Any]] = collections.deque()
         self._lost_chunks: List[Chunk] = []       # popped, then failed
         self._pending_done: List[ChunkRecord] = []  # done, not yet returned
+        # whether outputs carry a jax.Array.is_ready probe — decided on
+        # the first dispatched output. On a jax too old to expose it,
+        # "no probe" would read as "always ready" and the opportunistic
+        # drain would block on every unfinished chunk (worse than the
+        # depth-gated baseline), so poll mode degrades to block instead.
+        self._poll_ok: Optional[bool] = None
 
     def on_worker_start(self) -> None:
         if self.priority_boost:
             self.boosted = try_boost_priority()
 
-    def _complete_oldest(self) -> ChunkRecord:
+    # -- event-driven completion ---------------------------------------
+    def _polling(self) -> bool:
+        return self.completion_mode == "poll" and bool(self._poll_ok)
+
+    def _is_ready(self, outs: Any) -> bool:
+        """Non-blocking readiness probe over the output pytree. Leaves
+        without ``is_ready`` (host arrays, scalars) are always ready."""
+        for leaf in self.jax.tree_util.tree_leaves(outs):
+            is_ready = getattr(leaf, "is_ready", None)
+            if is_ready is not None and not is_ready():
+                return False
+        return True
+
+    def _wait_ready(self, outs: Any) -> None:
+        """Wait for the chunk's outputs without parking the dispatcher in
+        a hard ``block_until_ready``: poll ``jax.Array`` readiness with a
+        bounded-backoff yield (the paper's anti-oversubscription wait —
+        an oversubscribed host core gives its slice away instead of
+        spinning). ``completion_mode="block"`` restores the synchronous
+        wait (the paper's baseline Dynamic / benchmark old path)."""
+        if not self._polling():
+            self.jax.block_until_ready(outs)
+            return
+        delay = 0.0
+        while not self._is_ready(outs):
+            time.sleep(delay)       # 0.0 first: yield, don't nap
+            delay = min(max(delay * 2.0, self.POLL_MIN_S), self.POLL_MAX_S)
+        # all pollable leaves are ready: this returns without blocking and
+        # covers any leaves that had no is_ready probe
+        self.jax.block_until_ready(outs)
+
+    def _complete_oldest(self, known_ready: bool = False) -> ChunkRecord:
         rec, outs = self._inflight.popleft()
         try:
-            self.jax.block_until_ready(outs)
+            if known_ready:     # readiness just probed by the caller:
+                # skip the poll loop, keep the no-op barrier for leaves
+                # without a probe
+                self.jax.block_until_ready(outs)
+            else:
+                self._wait_ready(outs)
             rec.tg4 = clock()
             res = self.fetch(outs)
             rec.tg5 = clock()
@@ -148,6 +201,12 @@ class JaxChunkExecutor(ChunkExecutor):
         done: List[ChunkRecord] = self._pending_done
         self._pending_done = []
         try:
+            # opportunistic drain: anything already finished completes now
+            # (no wait), so completion latency is hidden behind dispatch
+            # instead of accumulating until the pipeline fills
+            if self._polling():
+                while self._inflight and self._is_ready(self._inflight[0][1]):
+                    done.append(self._complete_oldest(known_ready=True))
             while len(self._inflight) >= self.async_depth:
                 done.append(self._complete_oldest())
             host_inputs = self.make_inputs(token)
@@ -159,6 +218,10 @@ class JaxChunkExecutor(ChunkExecutor):
             outs = self.step(*dev_inputs) if isinstance(dev_inputs, tuple) \
                 else self.step(dev_inputs)
             rec.tg3 = clock()                   # dispatch returned (async)
+            if self._poll_ok is None:
+                self._poll_ok = any(
+                    hasattr(leaf, "is_ready")
+                    for leaf in self.jax.tree_util.tree_leaves(outs))
             self._inflight.append((rec, outs))
             if self.async_depth == 1:
                 done.append(self._complete_oldest())
@@ -215,13 +278,21 @@ class SleepExecutor(ChunkExecutor):
         rate = self.rate
         if self.slow_after is not None and self._count > self.slow_after:
             rate = self.rate / self.slow_factor
+        # skip zero-duration sleeps: time.sleep(0.0) is still a syscall
+        # (~µs each, up to four per chunk), real overhead a *simulated*
+        # run must not pay on its host-path measurements
+        service = token.chunk.size / rate
         rec.tg1 = clock()
-        time.sleep(self.t_hd)
+        if self.t_hd:
+            time.sleep(self.t_hd)
         rec.tg2 = clock()
-        time.sleep(self.t_kl)
+        if self.t_kl:
+            time.sleep(self.t_kl)
         rec.tg3 = clock()
-        time.sleep(token.chunk.size / rate)
+        if service:
+            time.sleep(service)
         rec.tg4 = clock()
-        time.sleep(self.t_dh)
+        if self.t_dh:
+            time.sleep(self.t_dh)
         rec.tg5 = clock()
         return [rec]

@@ -47,17 +47,27 @@ class OverheadLedger:
 
     def add(self, rec: ChunkRecord) -> None:
         with self._lock:
-            tot = self._per_group.setdefault(rec.token.group,
-                                             OverheadTotals())
-            tot.sp += rec.tc2 - rec.tc1
-            tot.hd += rec.tg2 - rec.tg1
-            tot.kl += rec.tg3 - rec.tg2
-            tot.dh += rec.tg5 - rec.tg4
-            tot.td += max((rec.tc3 - rec.tc2) - (rec.tg5 - rec.tg1), 0.0)
-            tot.kernel += rec.tg4 - rec.tg3
-            tot.n_chunks += 1
-            if self.keep_records:
-                self.records.append(rec)
+            self._add_locked(rec)
+
+    def add_many(self, recs) -> None:
+        """Batched accumulate: one lock acquisition for a whole completion
+        batch (the scheduler's per-worker finalize buffer)."""
+        with self._lock:
+            for rec in recs:
+                self._add_locked(rec)
+
+    def _add_locked(self, rec: ChunkRecord) -> None:
+        tot = self._per_group.setdefault(rec.token.group,
+                                         OverheadTotals())
+        tot.sp += rec.tc2 - rec.tc1
+        tot.hd += rec.tg2 - rec.tg1
+        tot.kl += rec.tg3 - rec.tg2
+        tot.dh += rec.tg5 - rec.tg4
+        tot.td += max((rec.tc3 - rec.tc2) - (rec.tg5 - rec.tg1), 0.0)
+        tot.kernel += rec.tg4 - rec.tg3
+        tot.n_chunks += 1
+        if self.keep_records:
+            self.records.append(rec)
 
     def totals(self, group: Optional[str] = None) -> OverheadTotals:
         with self._lock:

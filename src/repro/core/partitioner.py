@@ -12,6 +12,28 @@ The partitioner is work-conserving: it never hands out more iterations than
 remain, and the final chunks shrink to exhaust the space exactly (property-
 tested in tests/test_properties.py).
 
+Two chunk modes (the dispatch hot path):
+
+``chunk_mode="range"`` (default) — zero-contention dispatch. Each group
+owns a private index *range* sized by its λ-share of the remaining space;
+its dispatcher carves chunks out of it with plain arithmetic under a
+private (and therefore uncontended in steady state) lock. The global lock
+is touched only to *refill* an empty range from the unassigned space and
+to *steal* from the largest remaining range once the space runs dry — so
+a chunk grant never waits behind another group's Filter₁. Work
+conservation and requeue semantics are identical to the paper path
+(property-tested: same covered iteration set); the one behavioral
+difference is that a group's chunk size is recomputed per *refill*, not
+per token, so λ feedback quantizes to range granularity.
+
+``chunk_mode="paper"`` — the original lock-per-token path (one global
+lock serializing every ``next_token``), kept bit-compatible for
+paper-faithful runs and as the dispatch-overhead benchmark baseline.
+
+The global lock is wait-instrumented in both modes
+(``contention_stats()``), which is what benchmarks/dispatch_overhead.py
+reports as lock-wait time; the range-mode fast path never touches it.
+
 The partitioner is *epoch-reusable*: one instance serves successive
 iteration spaces on the persistent scheduler runtime. Group membership
 (including groups removed by death or elastic leave), the accelerator
@@ -19,26 +41,88 @@ reference, and — via the shared ThroughputTracker — the λ-EWMAs all carry
 across epochs; ``begin_epoch(space)`` swaps in the next space, and
 ``next_token``/``requeue`` accept an explicit space so overlapping epochs
 (one group draining epoch N while another starts N+1) never mix ranges.
+A group that dies or leaves returns its unconsumed ranges to their spaces
+(count conservation, like ``requeue``), so no assigned-but-unrun work is
+ever lost with its owner.
 """
 from __future__ import annotations
 
 import threading
+import time
+import weakref
 from typing import Dict, Optional
 
 from repro.core.throughput import ThroughputTracker
 from repro.core.types import Chunk, DeviceKind, GroupSpec, IterationSpace, \
     Token
 
+clock = time.monotonic
+
+CHUNK_MODES = ("range", "paper")
+
+
+class _TimedLock:
+    """threading.Lock accumulating acquire-wait time — the lock-wait
+    metric the dispatch-overhead benchmark reports. Two clock reads per
+    acquire; only the global/refill path pays them in range mode."""
+
+    __slots__ = ("_lock", "wait_s", "acquires")
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.wait_s = 0.0
+        self.acquires = 0
+
+    def __enter__(self) -> "_TimedLock":
+        t0 = clock()
+        self._lock.acquire()
+        # mutated under the lock just acquired: no torn updates
+        self.wait_s += clock() - t0
+        self.acquires += 1
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self._lock.release()
+
+
+class _GroupRange:
+    """Private [lo, hi) slice of one space owned by one group. ``lock``
+    is touched by the owner's dispatcher and, rarely, a thief — never by
+    the other dispatchers' steady-state grants."""
+
+    __slots__ = ("lo", "hi", "chunk", "lock")
+
+    def __init__(self):
+        self.lo = 0
+        self.hi = 0
+        self.chunk = 1              # per-refill chunk size (λ-sized)
+        self.lock = threading.Lock()
+
+    @property
+    def remaining(self) -> int:
+        return self.hi - self.lo
+
 
 class HeterogeneousPartitioner:
     def __init__(self, space: IterationSpace, groups: Dict[str, GroupSpec],
                  tracker: ThroughputTracker,
-                 base_quantum: int = 256):
+                 base_quantum: int = 256, chunk_mode: str = "range",
+                 refill_chunks: int = 8):
+        if chunk_mode not in CHUNK_MODES:
+            raise ValueError(f"chunk_mode must be one of {CHUNK_MODES}, "
+                             f"got {chunk_mode!r}")
         self.space = space
         self.groups = dict(groups)
         self.tracker = tracker
         self.base_quantum = base_quantum
-        self._lock = threading.Lock()
+        self.chunk_mode = chunk_mode
+        self.refill_chunks = max(1, refill_chunks)
+        self._lock = _TimedLock()
+        # per-space, per-group private ranges (range mode). Weak keys: a
+        # finalized epoch's space drops its range table with it, so a
+        # long-lived daemon does not accumulate one table per batch.
+        self._ranges: "weakref.WeakKeyDictionary[IterationSpace, Dict[str, _GroupRange]]" \
+            = weakref.WeakKeyDictionary()
         accels = [g for g in self.groups.values()
                   if g.kind == DeviceKind.ACCEL]
         self._ref: Optional[GroupSpec] = accels[0] if accels else None
@@ -62,13 +146,25 @@ class HeterogeneousPartitioner:
                 self._ref = spec
 
     def remove_group(self, name: str) -> None:
-        """Elastic leave / failure: stop scheduling to the group."""
+        """Elastic leave / failure: stop scheduling to the group. Its
+        unconsumed private ranges flow back to their spaces (count
+        conservation — same semantics as ``requeue``), so a live
+        dispatcher can absorb them."""
         with self._lock:
             self.groups.pop(name, None)
             if self._ref is not None and self._ref.name == name:
                 accels = [g for g in self.groups.values()
                           if g.kind == DeviceKind.ACCEL]
                 self._ref = accels[0] if accels else None
+            for space, ranges in list(self._ranges.items()):
+                st = ranges.get(name)
+                if st is None:
+                    continue
+                with st.lock:
+                    leftover = st.hi - st.lo
+                    st.lo = st.hi
+                if leftover > 0:
+                    space.put_back(Chunk(0, leftover))
 
     # ------------------------------------------------------------------
     def chunk_size_for(self, name: str) -> int:
@@ -78,6 +174,16 @@ class HeterogeneousPartitioner:
         elif self._ref is not None and self._ref.fixed_chunk:
             lam_ref = self.tracker.get(self._ref.name)
             lam = self.tracker.get(name)
+            # eq. (4) compares like with like (both previous-interval
+            # measurements). While the reference λ is still an unmeasured
+            # seed, a *measured* λ here can be 100× the seed (a warm CPU
+            # vs. a cold accel) and the ratio would hand this group the
+            # rest of the space — hold it to its seed until the
+            # reference has a real measurement. Range mode only: the
+            # paper path reproduces the original behavior bit-for-bit.
+            if self.chunk_mode == "range" \
+                    and not self.tracker.measured(self._ref.name):
+                lam = self.tracker.seed_of(name)
             size = int(round(self._ref.fixed_chunk * lam
                              / max(lam_ref, 1e-12)))          # eq. (4)
         else:
@@ -95,17 +201,121 @@ class HeterogeneousPartitioner:
                    space: Optional[IterationSpace] = None) -> Optional[Token]:
         """Filter₁ body for a device that just became idle. ``space``
         selects the epoch to draw from (defaults to the current one)."""
-        with self._lock:
-            if name not in self.groups:
-                return None
-            g = self.groups[name]
-            chunk = (space or self.space).take(self.chunk_size_for(name))
-            if chunk is None:
-                return None
-            return Token(chunk, g.name, g.kind)
+        g = self.groups.get(name)
+        if g is None:
+            return None
+        if self.chunk_mode == "paper":
+            with self._lock:
+                if name not in self.groups:
+                    return None
+                chunk = (space or self.space).take(self.chunk_size_for(name))
+                if chunk is None:
+                    return None
+                return Token(chunk, g.name, g.kind)
+        # -- range mode fast path: private arithmetic, no shared lock --
+        sp = space if space is not None else self.space
+        st = self._range_for(sp, name)
+        with st.lock:
+            lo = st.lo
+            if lo < st.hi:
+                n = st.chunk
+                if lo + n > st.hi:
+                    n = st.hi - lo
+                st.lo = lo + n
+                return Token(Chunk(lo, lo + n, sp.next_seq()), name, g.kind)
+        return self._refill_or_steal(sp, name, st)
 
     def requeue(self, chunk: Chunk,
                 space: Optional[IterationSpace] = None) -> None:
         """Fault tolerance: a failed/lost chunk re-enters its space."""
         with self._lock:
             (space or self.space).put_back(chunk)
+
+    # -- range machinery (global lock only here) ------------------------
+    def _range_for(self, sp: IterationSpace, name: str) -> _GroupRange:
+        ranges = self._ranges.get(sp)
+        if ranges is not None:
+            st = ranges.get(name)
+            if st is not None:
+                return st
+        with self._lock:
+            ranges = self._ranges.setdefault(sp, {})
+            st = ranges.get(name)
+            if st is None:
+                st = ranges[name] = _GroupRange()
+            return st
+
+    def _refill_or_steal(self, sp: IterationSpace, name: str,
+                         st: _GroupRange) -> Optional[Token]:
+        """Slow path: the group's range ran dry. Refill it λ-share-sized
+        from the unassigned space, or steal from the largest remaining
+        range when the space is exhausted."""
+        with self._lock:
+            g = self.groups.get(name)
+            if g is None:
+                return None
+            with st.lock:
+                if st.lo < st.hi:       # raced with another refill/steal
+                    n = min(st.chunk, st.hi - st.lo)
+                    lo, st.lo = st.lo, st.lo + n
+                    return Token(Chunk(lo, lo + n, sp.next_seq()),
+                                 name, g.kind)
+            chunk = self.chunk_size_for(name)
+            stats = self.tracker.stats(name)
+            if stats is None or stats.n == 0:
+                # cold start: λ is still the seed, so a multi-chunk grant
+                # would bank work on a guess (a slow group could hoard a
+                # λ-share range it then crawls through). One chunk, like
+                # the paper path, until the first real measurement.
+                want = chunk
+            else:
+                lam = self.tracker.get(name)
+                total_lam = sum(self.tracker.get(n_)
+                                for n_ in self.groups) or 1.0
+                # λ-share of the remaining space, at least one chunk, at
+                # most refill_chunks chunks: big enough to amortize the
+                # refill, small enough that a mis-sized grant is cheap
+                # to steal back
+                want = min(self.refill_chunks * chunk,
+                           max(chunk, int(sp.remaining * lam / total_lam)))
+            c = sp.take(want)
+            if c is None:
+                c = self._steal_locked(sp, name, chunk)
+                if c is None:
+                    return None
+            with st.lock:
+                st.chunk = chunk
+                st.lo, st.hi = c.begin, c.end
+                n = min(chunk, st.hi - st.lo)
+                lo, st.lo = st.lo, st.lo + n
+            return Token(Chunk(lo, lo + n, c.seq), name, g.kind)
+
+    def _steal_locked(self, sp: IterationSpace, name: str,
+                      chunk: int) -> Optional[Chunk]:
+        """Take the tail half (≥ one chunk) of the largest remaining range
+        of another group — exact load balancing at the end of the space,
+        where a λ-share grant to a slow group would otherwise straggle."""
+        ranges = self._ranges.get(sp)
+        if not ranges:
+            return None
+        victims = sorted(
+            ((st.remaining, n) for n, st in ranges.items() if n != name),
+            reverse=True)
+        for _, victim_name in victims:
+            victim = ranges[victim_name]
+            with victim.lock:
+                avail = victim.hi - victim.lo
+                if avail <= 0:
+                    continue
+                take = avail if avail <= chunk else max(chunk, avail // 2)
+                victim.hi -= take
+                return Chunk(victim.hi, victim.hi + take, sp.next_seq())
+        return None
+
+    # -- introspection ---------------------------------------------------
+    def contention_stats(self) -> Dict[str, float]:
+        """Global-lock wait time + acquire count. In paper mode every
+        token grant goes through it; in range mode only refills, steals,
+        requeues, and membership changes do."""
+        return {"lock_wait_s": self._lock.wait_s,
+                "lock_acquires": float(self._lock.acquires)}

@@ -108,12 +108,19 @@ class EpochHandle:
 class DynamicScheduler:
     def __init__(self, groups: Dict[str, GroupSpec],
                  executors: Dict[str, ChunkExecutor],
-                 alpha: float = 1.0, base_quantum: int = 256):
+                 alpha: float = 1.0, base_quantum: int = 256,
+                 chunk_mode: str = "range", finalize_batch: int = 8):
         assert set(groups) == set(executors)
         self.specs = dict(groups)
         self.executors = dict(executors)
         self.alpha = alpha
         self.base_quantum = base_quantum
+        self.chunk_mode = chunk_mode
+        # per-worker completion buffers flush into the (locked) tracker /
+        # ledgers every finalize_batch records instead of per record;
+        # paper mode keeps the original record-at-a-time behavior
+        self.finalize_batch = 1 if chunk_mode == "paper" \
+            else max(1, finalize_batch)
         self.tracker = ThroughputTracker(alpha)
         self.ledger = OverheadLedger()          # cumulative, runtime lifetime
         self.ledger.keep_records = False        # fractions only: a runtime-
@@ -149,7 +156,7 @@ class DynamicScheduler:
             # across epochs; each epoch swaps in a fresh space
             self.partitioner = HeterogeneousPartitioner(
                 IterationSpace(0, 0), self.specs, self.tracker,
-                self.base_quantum)
+                self.base_quantum, chunk_mode=self.chunk_mode)
             for name in list(self.specs):
                 self._spawn_locked(name, 0)
 
@@ -305,9 +312,17 @@ class DynamicScheduler:
 
     def _run_epoch(self, name: str, ex: ChunkExecutor,
                    epoch: EpochHandle) -> bool:
-        """Process one epoch's tokens; returns False if the group died."""
+        """Process one epoch's tokens; returns False if the group died.
+
+        Finished records are buffered per worker and flushed into the
+        shared ledgers in batches of ``finalize_batch`` (one lock
+        acquisition per batch instead of per record); every failure/exit
+        path flushes its buffer before this worker leaves the epoch
+        (the ``finally`` below), so no finished work is lost and no
+        epoch finalizes with records still parked in a buffer."""
         part = self.partitioner
         space = epoch.space
+        buf: List[ChunkRecord] = []
         ok = True
         try:
             while True:
@@ -320,44 +335,69 @@ class DynamicScheduler:
                 try:
                     done = ex.execute(token, rec)
                 except ChunkFailure:
-                    self._finalize(ex.completed(), epoch)
+                    self._stamp_tc3(ex.completed(), buf)
                     part.requeue(token.chunk, space)
                     for chunk in ex.abort():
                         part.requeue(chunk, space)
+                    self._finalize(buf, epoch)
                     self._mark_failed(name, epoch)
                     return False
                 except Exception:
-                    self._finalize(ex.completed(), epoch)
+                    self._stamp_tc3(ex.completed(), buf)
+                    self._finalize(buf, epoch)
                     self._mark_failed(name, epoch)
                     raise
-                self._finalize(done, epoch)
+                self._stamp_tc3(done, buf)
+                if len(buf) >= self.finalize_batch:
+                    self._finalize(buf, epoch)
             try:
-                self._finalize(ex.drain(), epoch)
+                self._stamp_tc3(ex.drain(), buf)
             except ChunkFailure:
-                self._finalize(ex.completed(), epoch)
+                self._stamp_tc3(ex.completed(), buf)
                 for chunk in ex.abort():
                     part.requeue(chunk, space)
+                self._finalize(buf, epoch)
                 self._mark_failed(name, epoch)
                 return False
         except BaseException:
             ok = False
             raise
         finally:
+            self._finalize(buf, epoch)
             self._leave_epoch(name, epoch)
         return ok
 
-    def _finalize(self, recs: List[ChunkRecord], epoch: EpochHandle) -> None:
+    def _stamp_tc3(self, done: List[ChunkRecord],
+                   buf: List[ChunkRecord]) -> None:
+        """Move completed records into the worker's buffer, stamping Tc3
+        (host resumed) and feeding the λ-tracker *now* — at
+        execute-return, not at the batched flush — so buffering neither
+        inflates O_td nor lets a group size its next chunk/range from a
+        λ that predates its own completions (the slow-group rebalance
+        would lag an epoch otherwise). Pipelined executors stamp Tc3 per
+        record at completion themselves
+        (dispatch.JaxChunkExecutor._complete_oldest); the stamp here is
+        the fallback for synchronous executors only."""
+        if not done:
+            return
         t = clock()
-        for rec in recs:
-            # pipelined executors stamp Tc3 per record at completion
-            # (dispatch.JaxChunkExecutor._complete_oldest); this is the
-            # fallback for synchronous executors only
+        for rec in done:
             if rec.tc3 == 0.0:
                 rec.tc3 = t
-            self.tracker.update(rec)
-            self.ledger.add(rec)
-            epoch.ledger.add(rec)
-            epoch._records.append(rec)
+        self.tracker.update_many(done)
+        buf.extend(done)
+
+    def _finalize(self, recs: List[ChunkRecord], epoch: EpochHandle) -> None:
+        """Flush a batch of finished records into the shared ledgers and
+        the epoch's record list (one lock acquisition per batch instead
+        of per record). Every record arrives via _stamp_tc3, so Tc3 and
+        the λ-tracker are already handled. Clears ``recs``."""
+        if not recs:
+            return
+        self.ledger.add_many(recs)
+        epoch.ledger.add_many(recs)
+        epoch._records.extend(recs)
+        del recs[:]
 
     def _mark_failed(self, name: str, epoch: EpochHandle) -> None:
         """In-band group death: exclude it from this and all later epochs."""

@@ -43,22 +43,42 @@ class ThroughputTracker:
             self._seed[group] = lam
 
     def update(self, rec: ChunkRecord) -> float:
-        lam = rec.throughput
         with self._lock:
-            st = self._stats.setdefault(rec.token.group, GroupStats())
-            st.last = lam
-            st.ewma = lam if st.n == 0 else \
-                self.alpha * lam + (1 - self.alpha) * st.ewma
-            st.n += 1
-            st.total_items += rec.token.chunk.size
-            st.total_time += max(rec.device_time, 1e-12)
-            return st.ewma
+            return self._update_locked(rec)
+
+    def update_many(self, recs) -> None:
+        """Batched update: one lock acquisition for a whole completion
+        batch (the scheduler's per-worker finalize buffer)."""
+        with self._lock:
+            for rec in recs:
+                self._update_locked(rec)
+
+    def _update_locked(self, rec: ChunkRecord) -> float:
+        lam = rec.throughput
+        st = self._stats.setdefault(rec.token.group, GroupStats())
+        st.last = lam
+        st.ewma = lam if st.n == 0 else \
+            self.alpha * lam + (1 - self.alpha) * st.ewma
+        st.n += 1
+        st.total_items += rec.token.chunk.size
+        st.total_time += max(rec.device_time, 1e-12)
+        return st.ewma
 
     def get(self, group: str) -> float:
         with self._lock:
             st = self._stats.get(group)
             if st and st.n:
                 return st.ewma
+            return self._seed.get(group, 1.0)
+
+    def measured(self, group: str) -> bool:
+        """Whether ``get`` returns a real measurement (vs. a seed)."""
+        with self._lock:
+            st = self._stats.get(group)
+            return bool(st is not None and st.n)
+
+    def seed_of(self, group: str) -> float:
+        with self._lock:
             return self._seed.get(group, 1.0)
 
     def stats(self, group: str) -> Optional[GroupStats]:

@@ -109,6 +109,13 @@ class IterationSpace:
     def remaining(self) -> int:
         return self._end - self._next
 
+    def next_seq(self) -> int:
+        """Mint the next chunk sequence number. Atomic without a lock
+        (itertools.count under the GIL), so the partitioner's range-mode
+        fast path can tag chunks it carves out of a pre-assigned range
+        without touching shared state."""
+        return next(self._seq)
+
     def take(self, n: int) -> Optional[Chunk]:
         if self._next >= self._end:
             return None

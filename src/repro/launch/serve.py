@@ -62,6 +62,11 @@ def main():
     ap.add_argument("--decode-tokens", type=int, default=8)
     ap.add_argument("--groups", default="accel:chunk=8:async=2,cpu0")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--chunk-mode", choices=["range", "paper"],
+                    default="range",
+                    help="dispatch hot path: 'range' = zero-contention "
+                         "work-stealing range partitioner (default); "
+                         "'paper' = the lock-per-token baseline")
     ap.add_argument("--queue", action="store_true",
                     help="submit requests as prioritized jobs through "
                          "admission control instead of one bare batch")
@@ -136,7 +141,7 @@ def main():
                      f"{sorted(group_names)}")
     eng = HeteroServeEngine(cfg, groups, prompt_len=args.prompt_len,
                             decode_tokens=args.decode_tokens,
-                            seed=args.seed)
+                            seed=args.seed, chunk_mode=args.chunk_mode)
     if args.queue:
         # cover --requests exactly: full jobs plus a remainder job
         full, rem = divmod(args.requests, args.job_items)

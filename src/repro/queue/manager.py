@@ -21,9 +21,30 @@ from __future__ import annotations
 import heapq
 import itertools
 import threading
+import time
 from typing import Dict, List, Optional, Set, Tuple
 
 from repro.queue.job import Job, JobState
+
+
+def drain_with_deadline(cond: threading.Condition, pop_many_locked,
+                        max_n: int, timeout: Optional[float]) -> List[Job]:
+    """Shared blocking loop for batched pops (QueueManager and the
+    tenancy ShardedQueueManager): returns as soon as at least one job is
+    eligible, and a wakeup that loses the race to another consumer
+    consumes the *remaining* budget instead of restarting it. Caller
+    must already hold ``cond``'s lock."""
+    jobs = pop_many_locked(max_n)
+    if jobs or not timeout:
+        return jobs
+    deadline = time.monotonic() + timeout
+    while True:
+        remaining = deadline - time.monotonic()
+        if remaining <= 0 or not cond.wait(remaining):
+            return pop_many_locked(max_n)
+        jobs = pop_many_locked(max_n)
+        if jobs:
+            return jobs
 
 
 class QueueManager:
@@ -85,6 +106,26 @@ class QueueManager:
                     return None
                 if not self._not_empty.wait(timeout):
                     return self._pop_admitted_locked()
+
+    def pop_many(self, max_n: int,
+                 timeout: Optional[float] = None) -> List[Job]:
+        """Up to ``max_n`` highest-priority ADMITTED jobs in ONE lock
+        acquisition — the batched drain. Same blocking contract as
+        ``pop`` (``timeout=None`` → non-blocking); returns as soon as at
+        least one job is available rather than waiting for a full batch.
+        Jobs stay ADMITTED (two-phase pop, see ``pop``)."""
+        with self._not_empty:
+            return drain_with_deadline(self._not_empty,
+                                       self._pop_many_locked, max_n, timeout)
+
+    def _pop_many_locked(self, max_n: int) -> List[Job]:
+        jobs: List[Job] = []
+        while len(jobs) < max_n:
+            job = self._pop_admitted_locked()
+            if job is None:
+                break
+            jobs.append(job)
+        return jobs
 
     def _pop_admitted_locked(self) -> Optional[Job]:
         while self._heap:

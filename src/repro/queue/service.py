@@ -1,6 +1,8 @@
 """JobService: continuous drain of the queue into the persistent runtime.
 
-Each batch pops up to ``batch_jobs`` jobs (priority order), concatenates
+Each batch pops up to ``batch_jobs`` jobs (priority order; one
+``pop_many`` lock acquisition / DWRR pass when the queue supports the
+batched drain), concatenates
 their items into one iteration space, and submits it as an *epoch* on a
 long-lived DynamicScheduler runtime — the paper's §3.1 pipeline is the
 *execution* layer; this is the *admission-to-execution* bridge. The drain
@@ -288,6 +290,13 @@ class JobService:
 
     # -- batch pipeline ------------------------------------------------
     def _pop_batch(self, block_s: float = 0.0) -> List[Job]:
+        """Form one scheduler batch. Queues with a batched drain
+        (``pop_many``: one lock acquisition / one DWRR pass for the whole
+        batch) are preferred; job-at-a-time pop is the fallback for
+        duck-typed queues without it."""
+        pop_many = getattr(self.queue, "pop_many", None)
+        if pop_many is not None:
+            return pop_many(self.batch_jobs, timeout=block_s or None)
         jobs: List[Job] = []
         first = self.queue.pop(timeout=block_s or None)
         if first is None:

@@ -66,7 +66,7 @@ class HeteroServeEngine:
     def __init__(self, cfg: LMConfig, groups: List[GroupDef],
                  prompt_len: int = 32, decode_tokens: int = 8,
                  max_len: Optional[int] = None, seed: int = 0,
-                 alpha: float = 0.5):
+                 alpha: float = 0.5, chunk_mode: str = "range"):
         self.cfg = cfg
         self.groups = groups
         self.prompt_len = prompt_len
@@ -74,6 +74,9 @@ class HeteroServeEngine:
         self.max_len = max_len or bucket(prompt_len + decode_tokens)
         self.seed = seed
         self.alpha = alpha
+        # "range": zero-contention dispatch (private λ-share ranges with
+        # work stealing); "paper": the lock-per-token baseline
+        self.chunk_mode = chunk_mode
         self.params = M.init_params(cfg, jax.random.PRNGKey(seed))
         self._fns: Dict[int, tuple] = {}
         # fail-injection counters persist across executors so an injected
@@ -177,7 +180,8 @@ class HeteroServeEngine:
             execs[g.name] = self._executor_for(g)
         if not specs:
             raise RuntimeError("no live device groups")
-        return DynamicScheduler(specs, execs, alpha=self.alpha)
+        return DynamicScheduler(specs, execs, alpha=self.alpha,
+                                chunk_mode=self.chunk_mode)
 
     def serve(self, n_requests: int) -> ServeReport:
         sched = self._build_scheduler(max_chunk=n_requests)

@@ -16,7 +16,18 @@ deficit-weighted round robin (DWRR, Shreedhar & Varghese):
     converges to weight share among *backlogged* tenants and an
     underloaded tenant is never blocked by another tenant's backlog
     (work conservation: the rotation only ever skips empty or
-    quota-capped shards).
+    quota-capped shards);
+  * burst credits: a tenant whose spec carries ``burst_quantum`` keeps up
+    to that many items of deficit when its shard empties (bounded
+    carry-over, a DWRR/token-bucket hybrid) so a spiky interactive tenant
+    does not re-pay the ramp-up rounds on every burst; the default 0
+    keeps the classic reset.
+
+``pop_many(max_n)`` forms a whole batch under ONE lock acquisition (the
+per-pop DWRR scan repeats while the lock is held, so deficits are
+charged per item and fairness shares are identical to ``max_n`` single
+pops) — which is what JobService uses to build its scheduler batches
+without re-taking the shard lock per job.
 
 Within a shard, the tenant's own priority/FIFO order is untouched.
 
@@ -40,7 +51,7 @@ import time
 from typing import Dict, List, Optional
 
 from repro.queue.job import Job, JobState
-from repro.queue.manager import QueueManager
+from repro.queue.manager import QueueManager, drain_with_deadline
 
 
 class ShardedQueueManager:
@@ -149,6 +160,31 @@ class ShardedQueueManager:
                 if job is not None:
                     return job
 
+    def pop_many(self, max_n: int,
+                 timeout: Optional[float] = None) -> List[Job]:
+        """Up to ``max_n`` jobs under ONE lock acquisition — the per-pop
+        DWRR scan repeats with the lock held, so deficits are charged
+        per item and drained shares match ``max_n`` single pops exactly.
+        Same blocking contract as ``pop``; returns as soon as at least
+        one job is eligible."""
+        with self._not_empty:
+            return drain_with_deadline(self._not_empty,
+                                       self._pop_many_locked, max_n, timeout)
+
+    def _pop_many_locked(self, max_n: int) -> List[Job]:
+        jobs: List[Job] = []
+        while len(jobs) < max_n:
+            job = self._pop_locked()
+            if job is None:
+                break
+            jobs.append(job)
+        return jobs
+
+    def _burst_cap(self, tenant: str) -> float:
+        spec = self._spec(tenant)
+        return getattr(spec, "burst_quantum", 0.0) or 0.0 \
+            if spec is not None else 0.0
+
     def _eligible_head(self, tenant: str) -> Optional[Job]:
         if not self._under_quota(tenant):
             return None
@@ -187,8 +223,10 @@ class ShardedQueueManager:
             head = self._eligible_head(tenant)
             if head is None:
                 if self._shards[tenant].peek() is None:
-                    # empty shard leaves the round: no banked credit
-                    self._deficit[tenant] = 0.0
+                    # empty shard leaves the round: banked credit capped
+                    # at the tenant's burst quantum (0 = classic reset)
+                    self._deficit[tenant] = min(self._deficit[tenant],
+                                                self._burst_cap(tenant))
                 self._advance_locked()      # empty or quota-capped
                 continue
             if self._deficit[tenant] < head.items:

@@ -14,6 +14,12 @@ A TenantSpec is the resource-arbitration contract for one tenant:
   energy_budget_j  soft energy budget: a tenant whose attributed joules
                    exceed it gets its effective DWRR weight derated
                    (budget/spent, floored), not its jobs dropped
+  burst_quantum    bounded deficit carry-over in items (DWRR/token-bucket
+                   hybrid): when the tenant's shard empties it keeps up
+                   to this much banked deficit instead of the classic
+                   reset to zero, so a spiky interactive tenant does not
+                   re-pay ramp-up each burst; 0 (default) keeps classic
+                   DWRR behavior
 
 The registry is deliberately permissive: get() auto-registers unknown
 tenants with a default spec so a single-tenant deployment (everything
@@ -41,6 +47,7 @@ class TenantSpec:
     max_inflight: Optional[int] = None
     slo_delay_s: Optional[float] = None
     energy_budget_j: Optional[float] = None
+    burst_quantum: float = 0.0
 
     def __post_init__(self):
         if not self.name:
@@ -49,22 +56,28 @@ class TenantSpec:
             raise ValueError(f"tenant {self.name}: weight must be > 0")
         if self.max_inflight is not None and self.max_inflight < 1:
             raise ValueError(f"tenant {self.name}: max_inflight must be >= 1")
+        if self.burst_quantum < 0.0:
+            raise ValueError(
+                f"tenant {self.name}: burst_quantum must be >= 0")
 
     def as_dict(self) -> Dict:
         return {"name": self.name, "weight": self.weight,
                 "max_inflight": self.max_inflight,
                 "slo_delay_s": self.slo_delay_s,
-                "energy_budget_j": self.energy_budget_j}
+                "energy_budget_j": self.energy_budget_j,
+                "burst_quantum": self.burst_quantum}
 
 
 def _parse_one(token: str) -> TenantSpec:
-    """``name[:weight=W][:quota=N][:slo=S][:energy=J]`` → TenantSpec."""
+    """``name[:weight=W][:quota=N][:slo=S][:energy=J][:burst=B]`` →
+    TenantSpec."""
     parts = token.strip().split(":")
     name, kw = parts[0], {}
     keys = {"weight": ("weight", float),
             "quota": ("max_inflight", int),
             "slo": ("slo_delay_s", float),
-            "energy": ("energy_budget_j", float)}
+            "energy": ("energy_budget_j", float),
+            "burst": ("burst_quantum", float)}
     for p in parts[1:]:
         if "=" not in p:
             raise ValueError(f"tenant spec {token!r}: bad field {p!r}")
@@ -111,7 +124,8 @@ class TenantRegistry:
                 name=d["name"], weight=float(d.get("weight", 1.0)),
                 max_inflight=opt(d.get("max_inflight"), int),
                 slo_delay_s=opt(d.get("slo_delay_s"), float),
-                energy_budget_j=opt(d.get("energy_budget_j"), float)))
+                energy_budget_j=opt(d.get("energy_budget_j"), float),
+                burst_quantum=float(d.get("burst_quantum", 0.0))))
         return cls(specs)
 
     # -- access ---------------------------------------------------------

@@ -1,0 +1,441 @@
+"""Zero-contention dispatch hot path: range/steal partitioner vs. the
+paper's lock-per-token path, event-driven completion, batched queue
+drain, and DWRR burst credits."""
+import random
+import time
+
+import pytest
+
+from repro.core import (Chunk, ChunkRecord, DeviceKind, DynamicScheduler,
+                        GroupSpec, HeterogeneousPartitioner, IterationSpace,
+                        JaxChunkExecutor, SleepExecutor, ThroughputTracker,
+                        Token)
+from repro.core.dispatch import ChunkFailure
+from repro.queue.job import Job
+from repro.queue.manager import QueueManager
+from repro.tenancy import ShardedQueueManager, TenantRegistry, TenantSpec
+
+
+# ---------------------------------------------------------------------------
+# contention regression: 8 dispatcher threads through one epoch
+# ---------------------------------------------------------------------------
+
+def test_8_group_epoch_host_overhead_bounded():
+    """Eight SleepExecutor groups share one partitioner for a full epoch;
+    aggregate per-chunk host overhead (Tc2−Tc1: the Filter₁ grant,
+    including any lock wait) must stay under a generous bound — the
+    lock-per-token path blows through it once 8 dispatchers convoy on
+    the global lock."""
+    n_groups, items = 8, 40_000
+    groups = {
+        f"g{i}": GroupSpec(f"g{i}", DeviceKind.BIG, init_throughput=50_000,
+                           min_chunk=8)
+        for i in range(n_groups)}
+    execs = {f"g{i}": SleepExecutor(rate=50_000) for i in range(n_groups)}
+    s = DynamicScheduler(groups, execs, alpha=0.5)
+    res = s.run(0, items)
+    assert res.iterations == items
+    assert sum(res.per_group_items.values()) == items
+    host = sum(r.tc2 - r.tc1 for r in res.records) / len(res.records)
+    assert host < 1e-3, f"per-chunk host overhead {host * 1e6:.1f}µs"
+
+
+# ---------------------------------------------------------------------------
+# range/steal partitioning covers exactly the same iteration set as the
+# lock-per-token path
+# ---------------------------------------------------------------------------
+
+def _drive_to_exhaustion(part, space, names, rng):
+    """Random-order single-threaded drain; returns the issued chunks."""
+    chunks = []
+    while True:
+        name = rng.choice(names)
+        tok = part.next_token(name)
+        if tok is None:
+            if space.remaining == 0:
+                break               # range mode: private ranges dry too
+            continue
+        chunks.append(tok.chunk)
+    return chunks
+
+
+def _coverage(chunks):
+    seen = set()
+    for c in chunks:
+        span = set(range(c.begin, c.end))
+        assert not (span & seen), f"chunk {c} overlaps earlier chunk"
+        seen |= span
+    return seen
+
+
+def _make_groups(G, lams):
+    groups = {"accel": GroupSpec("accel", DeviceKind.ACCEL, fixed_chunk=G,
+                                 init_throughput=100.0)}
+    for i, lam in enumerate(lams):
+        groups[f"c{i}"] = GroupSpec(f"c{i}", DeviceKind.BIG,
+                                    init_throughput=lam, min_chunk=1)
+    return groups
+
+
+def _warm(tracker, groups):
+    """One synthetic measurement per group at exactly its seed λ: chunk
+    sizing is unchanged, but the partitioner sees a *measured* group and
+    activates λ-share range refills (cold groups refill one chunk)."""
+    for g in groups.values():
+        size = 1000
+        tracker.update(ChunkRecord(Token(Chunk(0, size, 0), g.name, g.kind),
+                                   tg1=0.0, tg5=size / g.init_throughput))
+
+
+@pytest.mark.parametrize("n,G,lams,seed", [
+    (1000, 640, [], 0),
+    (50_000, 256, [10.0, 90.0], 1),
+    (12_345, 100, [0.01, 1000.0, 5.0], 2),
+    (777, 4096, [3.0], 3),
+])
+def test_range_mode_coverage_matches_paper_mode(n, G, lams, seed):
+    covered = {}
+    for mode in ("paper", "range"):
+        groups = _make_groups(G, lams)
+        tracker = ThroughputTracker()
+        _warm(tracker, groups)
+        part = HeterogeneousPartitioner(
+            IterationSpace(0, n), groups, tracker, chunk_mode=mode)
+        chunks = _drive_to_exhaustion(part, part.space,
+                                      list(part.groups), random.Random(seed))
+        assert sum(c.size for c in chunks) == n
+        covered[mode] = _coverage(chunks)
+        assert covered[mode] == set(range(n))
+    assert covered["range"] == covered["paper"]
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    @given(
+        n=st.integers(1, 50_000),
+        G=st.integers(1, 4096),
+        lams=st.lists(st.floats(0.01, 1000.0), min_size=0, max_size=4),
+        order_seed=st.integers(0, 2**16),
+    )
+    @settings(max_examples=40, deadline=None)
+    def test_range_stealing_work_conservation_property(n, G, lams,
+                                                       order_seed):
+        """Property: the range/steal path hands out every iteration of
+        [0, n) exactly once under arbitrary interleavings — the same
+        contract the paper path is property-tested for."""
+        groups = _make_groups(G, lams)
+        tracker = ThroughputTracker()
+        _warm(tracker, groups)
+        part = HeterogeneousPartitioner(
+            IterationSpace(0, n), groups, tracker, chunk_mode="range")
+        chunks = _drive_to_exhaustion(part, part.space, list(part.groups),
+                                      random.Random(order_seed))
+        assert sum(c.size for c in chunks) == n
+        assert _coverage(chunks) == set(range(n))
+except ImportError:                      # pragma: no cover
+    pass
+
+
+def test_range_mode_steals_from_largest_range():
+    """Once the space is fully assigned, a dry group steals the tail of
+    the largest remaining range instead of idling."""
+    groups = {
+        "big": GroupSpec("big", DeviceKind.BIG, init_throughput=1e6),
+        "small": GroupSpec("small", DeviceKind.BIG, init_throughput=1.0),
+    }
+    tracker = ThroughputTracker()
+    _warm(tracker, groups)
+    part = HeterogeneousPartitioner(IterationSpace(0, 1000), groups,
+                                    tracker, chunk_mode="range")
+    tok_big = part.next_token("big")
+    assert part.space.remaining <= 1     # λ-share refill: big owns ~all
+    chunks, small_chunks = [tok_big.chunk], []
+    while True:                          # small lives entirely off steals
+        tok = part.next_token("small")
+        if tok is None:
+            break
+        small_chunks.append(tok.chunk)
+    # small drained work that had been assigned to big's private range
+    assert any(c.begin > tok_big.chunk.end for c in small_chunks)
+    while True:
+        tok = part.next_token("big")
+        if tok is None:
+            break
+        chunks.append(tok.chunk)
+    assert _coverage(chunks + small_chunks) == set(range(1000))
+
+
+def test_range_mode_remove_group_returns_unconsumed_range():
+    """A group removed (death / elastic leave) mid-range returns its
+    unconsumed iterations to the space — count conservation, exactly
+    like a chunk requeue."""
+    groups = {
+        "doomed": GroupSpec("doomed", DeviceKind.BIG, init_throughput=1e6),
+        "live": GroupSpec("live", DeviceKind.BIG, init_throughput=1e6),
+    }
+    tracker = ThroughputTracker()
+    _warm(tracker, groups)
+    part = HeterogeneousPartitioner(IterationSpace(0, 1000), groups,
+                                    tracker, chunk_mode="range")
+    tok = part.next_token("doomed")
+    consumed = tok.chunk.size
+    part.remove_group("doomed")
+    assert part.next_token("doomed") is None
+    # every assigned-but-unconsumed iteration is back in the space:
+    # only the one consumed chunk is gone
+    assert part.space.remaining == 1000 - consumed
+    total = consumed
+    while True:
+        t = part.next_token("live")
+        if t is None:
+            break
+        total += t.chunk.size
+    assert total == 1000
+
+
+def test_contention_stats_range_mode_rarely_touches_global_lock():
+    n = 100_000
+    acquires = {}
+    for mode in ("paper", "range"):
+        groups = {"g": GroupSpec("g", DeviceKind.BIG, init_throughput=1.0)}
+        tracker = ThroughputTracker()
+        _warm(tracker, groups)
+        part = HeterogeneousPartitioner(
+            IterationSpace(0, n), groups, tracker, chunk_mode=mode)
+        chunks = 0
+        while part.next_token("g") is not None:
+            chunks += 1
+        stats = part.contention_stats()
+        acquires[mode] = stats["lock_acquires"]
+        if mode == "paper":             # one global acquire per grant
+            assert stats["lock_acquires"] >= chunks
+    assert acquires["range"] < acquires["paper"] / 4
+
+
+# ---------------------------------------------------------------------------
+# event-driven completion (readiness poll)
+# ---------------------------------------------------------------------------
+
+def _jax_exec(**kw):
+    import numpy as np
+    return JaxChunkExecutor(lambda x: x * 2.0,
+                            lambda tok: np.ones(tok.chunk.size, np.float32),
+                            **kw)
+
+
+def _tok(i):
+    return Token(Chunk(i * 8, (i + 1) * 8, i), "a", DeviceKind.ACCEL)
+
+
+def test_poll_mode_completes_opportunistically():
+    """With the readiness poll, a finished chunk is returned on the next
+    execute() even though the pipeline is far from its depth cap — the
+    old path sat on it until the cap forced a blocking wait."""
+    ex = _jax_exec(async_depth=4)        # completion_mode="poll" default
+    assert ex.execute(_tok(0), ChunkRecord(_tok(0), tc1=1., tc2=1.)) == []
+    time.sleep(0.3)                      # tiny op: certainly ready now
+    done = ex.execute(_tok(1), ChunkRecord(_tok(1), tc1=1., tc2=1.))
+    assert [r.token.chunk.seq for r in done] == [0]
+    assert len(ex.drain()) == 1
+
+
+def test_poll_mode_completion_failure_bookkeeping():
+    """Poll-mode mirror of the block-mode failure test: a fetch failure
+    during opportunistic completion loses neither finished records nor
+    the popped chunk."""
+    calls = {"n": 0}
+
+    def fetch(outs):
+        calls["n"] += 1
+        if calls["n"] == 2:
+            raise ChunkFailure("device died during fetch")
+        return None
+
+    ex = _jax_exec(fetch=fetch, async_depth=4)
+    assert ex.execute(_tok(0), ChunkRecord(_tok(0), tc1=1., tc2=1.)) == []
+    time.sleep(0.2)
+    done = ex.execute(_tok(1), ChunkRecord(_tok(1), tc1=1., tc2=1.))
+    assert [r.token.chunk.seq for r in done] == [0]
+    time.sleep(0.2)
+    with pytest.raises(ChunkFailure):    # opportunistic completion of 1
+        ex.execute(_tok(2), ChunkRecord(_tok(2), tc1=1., tc2=1.))
+    assert ex.completed() == []
+    assert [c.seq for c in ex.abort()] == [1]
+
+
+def test_completion_mode_validated():
+    with pytest.raises(ValueError):
+        _jax_exec(completion_mode="spin")
+
+
+def test_poll_and_block_schedule_same_result():
+    for mode in ("poll", "block"):
+        ex = _jax_exec(async_depth=3, completion_mode=mode,
+                       fetch=lambda o: float(o.sum()))
+        s = DynamicScheduler(
+            {"a": GroupSpec("a", DeviceKind.ACCEL, fixed_chunk=64)},
+            {"a": ex})
+        res = s.run(0, 1000)
+        assert res.iterations == 1000
+        assert all(r.tc3 >= r.tg5 > 0 for r in res.records)
+        assert all("result" in r.meta for r in res.records)
+
+
+def test_sleep_executor_skips_zero_sleeps(monkeypatch):
+    """time.sleep(0.0) is a real syscall; a simulated run with zero
+    t_hd/t_kl/t_dh must not pay it up to four times per chunk."""
+    import repro.core.dispatch as D
+    calls = []
+    monkeypatch.setattr(D.time, "sleep", lambda s: calls.append(s))
+    tok = Token(Chunk(0, 10, 0), "g", DeviceKind.BIG)
+    D.SleepExecutor(rate=1000.0).execute(tok, ChunkRecord(tok))
+    assert calls == [10 / 1000.0]        # service sleep only
+    calls.clear()
+    D.SleepExecutor(rate=float("inf")).execute(tok, ChunkRecord(tok))
+    assert calls == []                   # pure host path: no syscalls
+    calls.clear()
+    D.SleepExecutor(rate=1000.0, t_hd=0.001, t_dh=0.002).execute(
+        tok, ChunkRecord(tok))
+    assert calls == [0.001, 10 / 1000.0, 0.002]
+
+
+# ---------------------------------------------------------------------------
+# batched queue drain: pop_many
+# ---------------------------------------------------------------------------
+
+def test_queue_manager_pop_many_priority_order_and_cap():
+    q = QueueManager()
+    jobs = [Job(items=1, priority=p) for p in (2, 0, 1, 0, 2)]
+    for j in jobs:
+        q.put(j)
+    batch = q.pop_many(3)
+    assert [j.priority for j in batch] == [0, 0, 1]
+    assert q.pop_many(10) == [jobs[0], jobs[4]]
+    assert q.pop_many(4) == []           # empty, non-blocking
+
+
+def test_queue_manager_pop_many_blocks_until_first_job():
+    import threading
+    q = QueueManager()
+    job = Job(items=1)
+    threading.Timer(0.05, lambda: q.put(job)).start()
+    batch = q.pop_many(8, timeout=2.0)
+    assert batch == [job]
+
+
+def test_sharded_pop_many_preserves_dwrr_shares():
+    """A whole batch formed in one DWRR pass charges deficits per item:
+    drained share under 10:1 weights matches 10:1, exactly as with
+    single pops."""
+    reg = TenantRegistry([TenantSpec("gold", weight=10.0),
+                          TenantSpec("free", weight=1.0)])
+    q = ShardedQueueManager(reg, quantum=10)
+    for _ in range(40):
+        q.put(Job(items=10, tenant="gold"))
+        q.put(Job(items=10, tenant="free"))
+    drained = []
+    while len(drained) < 44:
+        batch = q.pop_many(11)
+        assert batch
+        drained.extend(batch)
+    gold = sum(1 for j in drained if j.tenant == "gold")
+    assert gold >= 36                    # ≈ 10/11 of the drained work
+    # work conservation: the rest still drains once gold empties
+    rest = q.pop_many(100)
+    assert len(drained) + len(rest) == 80
+
+
+def test_sharded_pop_many_single_tenant_matches_heap_order():
+    q = ShardedQueueManager()
+    jobs = [Job(items=1, priority=p) for p in (1, 0, 2)]
+    for j in jobs:
+        q.put(j)
+    assert q.pop_many(5) == [jobs[1], jobs[0], jobs[2]]
+
+
+# ---------------------------------------------------------------------------
+# DWRR burst credits (TenantSpec.burst_quantum)
+# ---------------------------------------------------------------------------
+
+def test_burst_quantum_spec_parse_and_validation():
+    reg = TenantRegistry.parse("spiky:weight=2:burst=40,steady")
+    assert reg.get("spiky").burst_quantum == 40.0
+    assert reg.get("steady").burst_quantum == 0.0
+    with pytest.raises(ValueError):
+        TenantSpec("bad", burst_quantum=-1.0)
+
+
+def test_burst_quantum_caps_carried_deficit():
+    """An emptied shard keeps at most burst_quantum of banked deficit;
+    the default 0 reproduces the classic DWRR reset exactly."""
+    for burst, expect in ((40.0, 40.0), (0.0, 0.0)):
+        reg = TenantRegistry([TenantSpec("spiky", burst_quantum=burst),
+                              TenantSpec("steady")])
+        q = ShardedQueueManager(reg, quantum=64)
+        q.put(Job(items=10, tenant="spiky"))
+        q.put(Job(items=10, tenant="steady"))
+        assert q.pop().tenant == "spiky"  # credit 64, leftover 54 banked
+        assert q.pop().tenant == "steady"  # rotation passed empty spiky
+        assert q._deficit["spiky"] == expect
+
+
+def test_burst_credit_skips_rampup_after_idle_gap():
+    """A spiky tenant with burst credit gets its next burst served ahead
+    of one more competitor job than the classic-reset tenant — it does
+    not re-pay the deficit ramp-up."""
+    def steady_jobs_before_second_spiky(burst):
+        reg = TenantRegistry([
+            TenantSpec("spiky", burst_quantum=burst),
+            TenantSpec("steady")])
+        q = ShardedQueueManager(reg, quantum=10)
+        q.put(Job(items=5, tenant="spiky"))
+        for _ in range(20):
+            q.put(Job(items=10, tenant="steady"))
+        assert q.pop().tenant == "spiky"   # leftover deficit 5
+        q.pop()                            # spiky empties; steady serves
+        q.put(Job(items=15, tenant="spiky"))   # the next burst
+        count = 0
+        while True:
+            j = q.pop()
+            if j.tenant == "spiky":
+                return count
+            count += 1
+    with_burst = steady_jobs_before_second_spiky(100.0)
+    without = steady_jobs_before_second_spiky(0.0)
+    assert with_burst < without
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: batched finalize + range mode on the persistent runtime
+# ---------------------------------------------------------------------------
+
+def test_range_mode_death_requeue_conserves_work():
+    """A group dying mid-epoch in range mode returns both its in-flight
+    chunk and its unconsumed private range; survivors absorb the work."""
+    groups = {
+        "ok": GroupSpec("ok", DeviceKind.BIG, init_throughput=100_000,
+                        min_chunk=4),
+        "bad": GroupSpec("bad", DeviceKind.BIG, init_throughput=100_000,
+                         min_chunk=4),
+    }
+    execs = {"ok": SleepExecutor(rate=100_000),
+             "bad": SleepExecutor(rate=100_000, fail_after=2)}
+    s = DynamicScheduler(groups, execs, alpha=0.5)
+    res = s.run(0, 20_000)
+    assert "bad" in res.failed_groups
+    assert res.iterations >= 20_000
+    assert sum(res.per_group_items.values()) == res.iterations
+
+
+def test_finalize_batch_flushes_all_records():
+    """Batched per-worker finalize must not drop or double-count records
+    at epoch end (flush-on-exit path)."""
+    s = DynamicScheduler(
+        {"g": GroupSpec("g", DeviceKind.BIG, init_throughput=10_000,
+                        min_chunk=4)},
+        {"g": SleepExecutor(rate=10_000)}, alpha=0.5, finalize_batch=16)
+    res = s.run(0, 5_000)
+    assert res.iterations == 5_000
+    assert sum(r.token.chunk.size for r in res.records) == 5_000
+    assert s.tracker.stats("g").n == len(res.records)

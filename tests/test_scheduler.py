@@ -251,9 +251,13 @@ def test_completion_failure_keeps_finished_records_and_chunks():
             raise ChunkFailure("device died during fetch")
         return float(np.asarray(outs).sum())
 
+    # completion_mode="block": this test pins the legacy synchronous
+    # sequencing (no opportunistic early completion); the poll path's
+    # failure bookkeeping is covered in tests/test_dispatch_hotpath.py
     ex = JaxChunkExecutor(lambda x: x * 2.0,
                           lambda tok: np.ones(tok.chunk.size, np.float32),
-                          fetch=fetch, async_depth=3)
+                          fetch=fetch, async_depth=3,
+                          completion_mode="block")
     toks = [Token(Chunk(i * 8, (i + 1) * 8, i), "a", DeviceKind.ACCEL)
             for i in range(3)]
     for tok in toks:
@@ -287,7 +291,7 @@ def test_launch_failure_keeps_records_completed_in_same_call():
 
     ex = JaxChunkExecutor(step,
                           lambda tok: np.ones(tok.chunk.size, np.float32),
-                          async_depth=2)
+                          async_depth=2, completion_mode="block")
     toks = [Token(Chunk(i * 8, (i + 1) * 8, i), "a", DeviceKind.ACCEL)
             for i in range(3)]
     assert ex.execute(toks[0], ChunkRecord(toks[0], tc1=1.0, tc2=1.0)) == []
@@ -307,7 +311,7 @@ def test_tc3_stamped_per_record_in_pipelined_drain():
 
     ex = JaxChunkExecutor(lambda x: x * 2.0,
                           lambda tok: np.ones(tok.chunk.size, np.float32),
-                          async_depth=4)
+                          async_depth=4, completion_mode="block")
     from repro.core.types import Chunk, ChunkRecord, Token
 
     recs = []
