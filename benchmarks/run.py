@@ -26,11 +26,16 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write results as JSON to PATH")
-    ap.add_argument("--only", default=None, metavar="SUBSTR",
+    ap.add_argument("--out", default=None, metavar="PATH",
+                    help="alias for --json (e.g. --out BENCH_6.json for "
+                         "a committed per-PR benchmark record)")
+    ap.add_argument("--only", default=None, metavar="SUBSTRS",
                     help="run only benchmark suites whose function name "
-                         "contains SUBSTR (e.g. batch_boundary, "
-                         "queue_saturation, tenant_fairness, fig7, "
-                         "dispatch_overhead, realexec)")
+                         "contains one of the comma-separated substrings "
+                         "(e.g. batch_boundary, queue_saturation, "
+                         "tenant_fairness, fig7, dispatch_overhead,"
+                         "telemetry_overhead, realexec — or "
+                         "'dispatch_overhead,telemetry_overhead')")
     ap.add_argument("--quick", action="store_true",
                     help="tiny-size smoke profile: runs only the suites "
                          "with a quick variant (dispatch_overhead, which "
@@ -43,13 +48,17 @@ def main() -> None:
         QUICK as DISPATCH_QUICK
     from benchmarks.paper_figures import ALL as PAPER
     from benchmarks.queue_saturation import ALL as QUEUE
+    from benchmarks.telemetry_overhead import ALL as TELEMETRY, \
+        QUICK as TELEMETRY_QUICK
     from benchmarks.tenant_fairness import ALL as TENANT
 
-    everything = PAPER + QUEUE + BOUNDARY + TENANT + DISPATCH
+    everything = PAPER + QUEUE + BOUNDARY + TENANT + DISPATCH + TELEMETRY
     if args.quick:
-        everything = DISPATCH_QUICK
+        everything = DISPATCH_QUICK + TELEMETRY_QUICK
+    wanted = [s.strip() for s in args.only.split(",") if s.strip()] \
+        if args.only else []
     suites = [fn for fn in everything
-              if not args.only or args.only in fn.__name__]
+              if not wanted or any(s in fn.__name__ for s in wanted)]
     if args.only and not suites:
         names = ", ".join(fn.__name__ for fn in everything)
         ap.error(f"--only {args.only!r} matches no suite; available: "
@@ -61,8 +70,9 @@ def main() -> None:
             print(f"{name},{us:.3f},{derived}")
             rows.append({"name": name, "us_per_call": round(us, 3),
                          "derived": derived})
-    if args.json:
-        with open(args.json, "w", encoding="utf-8") as fh:
+    out_path = args.out or args.json
+    if out_path:
+        with open(out_path, "w", encoding="utf-8") as fh:
             json.dump(rows, fh, indent=2)
             fh.write("\n")
 

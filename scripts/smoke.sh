@@ -7,8 +7,11 @@
 # before the slow integration stages; stage 3 is the dispatch-overhead
 # benchmark in its tiny --quick profile, which fails hard on a
 # schedule-result mismatch between the lock-per-token and range/steal
-# hot paths; stage 4 runs everything else except the slow-marked
-# integration / model-compile tests.
+# hot paths (and the telemetry-overhead ratio gate, which fails hard if
+# instrumentation cost creeps back onto the hot path); stage 4 is the
+# telemetry stage — a queued serve with --metrics-out whose JSONL feed is
+# validated for the key metric families; stage 5 runs everything else
+# except the slow-marked integration / model-compile tests.
 # Full suite: `python -m pytest -q`.
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -17,6 +20,34 @@ python -m pytest -q -x -m "not slow" \
   tests/test_dispatch_hotpath.py
 python -m pytest -q -x -m "not slow" tests/test_tenancy.py
 python -m benchmarks.run --quick
+SMOKE_TMP="$(mktemp -d)"
+trap 'rm -rf "$SMOKE_TMP"' EXIT
+# pytest picks src/ up from pyproject pythonpath and benchmarks.run
+# inserts it itself; the serve CLI and the inline validator need it set
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+python -m repro.launch.serve --arch yi-6b --reduced --queue \
+  --requests 16 --job-items 2 --tenants "gold:weight=4,free:weight=1" \
+  --metrics-out "$SMOKE_TMP/metrics.jsonl" --metrics-interval 0.2 \
+  --trace-out "$SMOKE_TMP/trace.json" > /dev/null
+python - "$SMOKE_TMP" <<'EOF'
+import json, sys
+from pathlib import Path
+from repro.telemetry import read_jsonl
+tmp = Path(sys.argv[1])
+snaps = read_jsonl(tmp / "metrics.jsonl")
+assert snaps and snaps[-1]["final"] is True, "no final snapshot"
+c = snaps[-1]["counters"]
+for fam in ("sched.chunks", "sched.epochs_finalized", "svc.batches",
+            "queue.dwrr_pops"):
+    assert any(k.startswith(fam) for k in c), f"missing {fam} in {sorted(c)}"
+h = snaps[-1]["histograms"]
+assert any(k.startswith("sched.chunk_host_s") for k in h), "no host hist"
+trace = json.loads((tmp / "trace.json").read_text())
+assert any(e.get("cat") == "chunk" for e in trace["traceEvents"]), \
+    "no chunk spans in trace"
+print(f"telemetry smoke ok: {len(snaps)} snapshots, "
+      f"{len(trace['traceEvents'])} trace events")
+EOF
 exec python -m pytest -q -m "not slow" \
   --ignore=tests/test_scheduler.py --ignore=tests/test_partitioner.py \
   --ignore=tests/test_queue.py --ignore=tests/test_tenancy.py "$@"

@@ -14,7 +14,7 @@ chunks only (the paper measures the offload path).
 from __future__ import annotations
 
 import threading
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Dict, List, Optional
 
 from repro.core.types import ChunkRecord, DeviceKind
@@ -72,7 +72,10 @@ class OverheadLedger:
     def totals(self, group: Optional[str] = None) -> OverheadTotals:
         with self._lock:
             if group is not None:
-                return self._per_group.get(group, OverheadTotals())
+                tot = self._per_group.get(group)
+                # copy under the lock: handing out the live accumulator
+                # would expose torn field pairs during a concurrent add
+                return OverheadTotals() if tot is None else replace(tot)
             agg = OverheadTotals()
             for t in self._per_group.values():
                 agg.sp += t.sp; agg.hd += t.hd; agg.kl += t.kl

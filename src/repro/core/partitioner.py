@@ -52,6 +52,7 @@ import time
 import weakref
 from typing import Dict, Optional
 
+from repro import telemetry as telemetry_mod
 from repro.core.throughput import ThroughputTracker
 from repro.core.types import Chunk, DeviceKind, GroupSpec, IterationSpace, \
     Token
@@ -107,7 +108,7 @@ class HeterogeneousPartitioner:
     def __init__(self, space: IterationSpace, groups: Dict[str, GroupSpec],
                  tracker: ThroughputTracker,
                  base_quantum: int = 256, chunk_mode: str = "range",
-                 refill_chunks: int = 8):
+                 refill_chunks: int = 8, telemetry=None):
         if chunk_mode not in CHUNK_MODES:
             raise ValueError(f"chunk_mode must be one of {CHUNK_MODES}, "
                              f"got {chunk_mode!r}")
@@ -118,6 +119,13 @@ class HeterogeneousPartitioner:
         self.chunk_mode = chunk_mode
         self.refill_chunks = max(1, refill_chunks)
         self._lock = _TimedLock()
+        # refill/steal/reclaim/requeue counters + a lock-wait collector;
+        # all off the range-mode fast path (they fire only where the
+        # global lock is already taken)
+        self.telemetry = telemetry_mod.resolve(telemetry)
+        self._tel_counters: Dict[str, object] = {}
+        if self.telemetry is not None:
+            self.telemetry.registry.add_collector(self._collect)
         # per-space, per-group private ranges (range mode). Weak keys: a
         # finalized epoch's space drops its range table with it, so a
         # long-lived daemon does not accumulate one table per batch.
@@ -165,6 +173,12 @@ class HeterogeneousPartitioner:
                     st.lo = st.hi
                 if leftover > 0:
                     space.put_back(Chunk(0, leftover))
+                    if self.telemetry is not None:
+                        self._count("part.reclaims")
+                        self._count("part.reclaimed_items", leftover)
+                        self.telemetry.tracer.instant(
+                            "range_reclaim", tid="partitioner",
+                            group=name, items=leftover)
 
     # ------------------------------------------------------------------
     def chunk_size_for(self, name: str) -> int:
@@ -230,6 +244,28 @@ class HeterogeneousPartitioner:
         """Fault tolerance: a failed/lost chunk re-enters its space."""
         with self._lock:
             (space or self.space).put_back(chunk)
+        if self.telemetry is not None:
+            self._count("part.requeues")
+            self._count("part.requeued_items", chunk.size)
+            self.telemetry.tracer.instant("chunk_requeue",
+                                          tid="partitioner",
+                                          items=chunk.size, seq=chunk.seq)
+
+    # -- telemetry plumbing ---------------------------------------------
+    def _count(self, name: str, n: float = 1.0) -> None:
+        c = self._tel_counters.get(name)
+        if c is None:
+            c = self._tel_counters[name] = \
+                self.telemetry.registry.counter(name)
+        c.add(n)
+
+    def _collect(self) -> None:
+        """Snapshot-time collector: publish global-lock contention as
+        gauges (the exporter thread pulls; the hot path never pushes)."""
+        stats = self.contention_stats()
+        reg = self.telemetry.registry
+        reg.gauge("part.lock_wait_s").set(stats["lock_wait_s"])
+        reg.gauge("part.lock_acquires").set(stats["lock_acquires"])
 
     # -- range machinery (global lock only here) ------------------------
     def _range_for(self, sp: IterationSpace, name: str) -> _GroupRange:
@@ -283,6 +319,15 @@ class HeterogeneousPartitioner:
                 c = self._steal_locked(sp, name, chunk)
                 if c is None:
                     return None
+                if self.telemetry is not None:
+                    self._count("part.steals")
+                    self._count("part.stolen_items", c.size)
+                    self.telemetry.tracer.instant(
+                        "range_steal", tid="partitioner",
+                        thief=name, items=c.size)
+            elif self.telemetry is not None:
+                self._count("part.refills")
+                self._count("part.refill_items", c.size)
             with st.lock:
                 st.chunk = chunk
                 st.lo, st.hi = c.begin, c.end
@@ -316,6 +361,10 @@ class HeterogeneousPartitioner:
     def contention_stats(self) -> Dict[str, float]:
         """Global-lock wait time + acquire count. In paper mode every
         token grant goes through it; in range mode only refills, steals,
-        requeues, and membership changes do."""
-        return {"lock_wait_s": self._lock.wait_s,
-                "lock_acquires": float(self._lock.acquires)}
+        requeues, and membership changes do. The pair is read under the
+        raw lock so the two fields are from the same acquire (no torn
+        snapshot), without the timed wrapper charging the read itself to
+        ``wait_s``."""
+        with self._lock._lock:
+            return {"lock_wait_s": self._lock.wait_s,
+                    "lock_acquires": float(self._lock.acquires)}

@@ -42,6 +42,7 @@ import threading
 from dataclasses import dataclass, field
 from typing import Deque, Dict, List, Optional, Tuple, Union
 
+from repro import telemetry as telemetry_mod
 from repro.core.dispatch import ChunkExecutor, ChunkFailure, clock
 from repro.core.overheads import OverheadLedger
 from repro.core.partitioner import HeterogeneousPartitioner
@@ -109,13 +110,32 @@ class DynamicScheduler:
     def __init__(self, groups: Dict[str, GroupSpec],
                  executors: Dict[str, ChunkExecutor],
                  alpha: float = 1.0, base_quantum: int = 256,
-                 chunk_mode: str = "range", finalize_batch: int = 8):
+                 chunk_mode: str = "range", finalize_batch: int = 8,
+                 telemetry=None):
         assert set(groups) == set(executors)
         self.specs = dict(groups)
         self.executors = dict(executors)
         self.alpha = alpha
         self.base_quantum = base_quantum
         self.chunk_mode = chunk_mode
+        # always-on observability: None → the process-wide default
+        # Telemetry; repro.telemetry.OFF → uninstrumented (the
+        # benchmarks/telemetry_overhead.py baseline). The dispatch hot
+        # path only *banks* finished completion batches (one GIL-atomic
+        # deque append per finalize batch); the per-record work —
+        # histograms, counters, chunk spans — runs in _tel_drain on the
+        # snapshot reader's thread, so instrumentation adds neither
+        # shared-lock contention nor per-chunk GIL pressure.
+        self.telemetry = telemetry_mod.resolve(telemetry)
+        self._tel_group: Dict[str, tuple] = {}
+        # banked (epoch_index, records) batches awaiting ingestion;
+        # bounded so a daemon nobody ever snapshots cannot pin every
+        # ChunkRecord forever — overflow evicts oldest (counted)
+        self._tel_pending: collections.deque = collections.deque(
+            maxlen=8192)
+        self._tel_lost = 0
+        if self.telemetry is not None:
+            self.telemetry.registry.add_collector(self._tel_drain)
         # per-worker completion buffers flush into the (locked) tracker /
         # ledgers every finalize_batch records instead of per record;
         # paper mode keeps the original record-at-a-time behavior
@@ -156,7 +176,9 @@ class DynamicScheduler:
             # across epochs; each epoch swaps in a fresh space
             self.partitioner = HeterogeneousPartitioner(
                 IterationSpace(0, 0), self.specs, self.tracker,
-                self.base_quantum, chunk_mode=self.chunk_mode)
+                self.base_quantum, chunk_mode=self.chunk_mode,
+                telemetry=self.telemetry
+                if self.telemetry is not None else telemetry_mod.OFF)
             for name in list(self.specs):
                 self._spawn_locked(name, 0)
 
@@ -179,6 +201,12 @@ class DynamicScheduler:
             handle = EpochHandle(self._epoch_base + len(self._epochs), space)
             self._epochs.append(handle)
             self.partitioner.begin_epoch(space)
+            if self.telemetry is not None:
+                self.telemetry.registry.counter(
+                    "sched.epochs_submitted").add()
+                self.telemetry.tracer.instant(
+                    "epoch_submit", tid="epochs", epoch=handle.index,
+                    items=space.remaining)
             if not self._worker_pos:        # every group already dead
                 self._finalize_epoch_locked(handle)
                 self._prune_epochs_locked()
@@ -200,6 +228,11 @@ class DynamicScheduler:
             for h in self._epochs:          # workers died / none left
                 if not h.finalized:
                     self._finalize_epoch_locked(h)
+        if self.telemetry is not None:
+            # flush banked completion batches now: once this scheduler is
+            # dropped its weak collector dies and they would be lost to
+            # any later exporter snapshot
+            self._tel_drain()
 
     # -- introspection -------------------------------------------------
     def dispatchers(self) -> Dict[str, threading.Thread]:
@@ -397,7 +430,59 @@ class DynamicScheduler:
         self.ledger.add_many(recs)
         epoch.ledger.add_many(recs)
         epoch._records.extend(recs)
+        if self.telemetry is not None:
+            # bank the batch for snapshot-time ingestion: one atomic
+            # append — the only telemetry cost on the dispatch hot path
+            pending = self._tel_pending
+            if len(pending) == pending.maxlen:
+                self._tel_lost += 1
+            pending.append((epoch.index, tuple(recs)))
         del recs[:]
+
+    def _tel_handles(self, group: str) -> tuple:
+        """Per-group metric handles, bound once (registry get-or-create
+        takes a lock; the flush path must not)."""
+        h = self._tel_group.get(group)
+        if h is None:
+            reg = self.telemetry.registry
+            h = self._tel_group[group] = (
+                reg.counter("sched.chunks", group=group),
+                reg.counter("sched.items", group=group),
+                reg.histogram("sched.chunk_host_s", group=group),
+                reg.histogram("sched.chunk_device_s", group=group))
+        return h
+
+    def _tel_drain(self) -> None:
+        """Snapshot-time collector: ingest banked completion batches into
+        metrics + chunk spans. Runs on the snapshot reader's thread (the
+        exporter daemon or a telemetry_snapshot caller) — never on a
+        dispatcher. A worker's buffer is single-group, so one handle
+        lookup covers each batch; concurrent snapshots are safe (popleft
+        is atomic, each batch is ingested exactly once)."""
+        pending = self._tel_pending
+        tracer = self.telemetry.tracer
+        while True:
+            try:
+                epoch_idx, recs = pending.popleft()
+            except IndexError:
+                break
+            chunks, items, host_h, dev_h = self._tel_handles(
+                recs[0].token.group)
+            n = 0
+            for rec in recs:
+                n += rec.token.chunk.size
+                host = (rec.tc2 - rec.tc1) + (max(rec.tc3 - rec.tg5, 0.0)
+                                              if rec.tg5 > 0.0
+                                              else max(rec.tc3 - rec.tc2,
+                                                       0.0))
+                host_h.observe(host)
+                dev_h.observe(rec.device_time)
+                tracer.chunk(rec, epoch_idx)
+            chunks.add(len(recs))
+            items.add(n)
+        if self._tel_lost:
+            self.telemetry.registry.gauge("sched.observe_lost_batches") \
+                .set(self._tel_lost)
 
     def _mark_failed(self, name: str, epoch: EpochHandle) -> None:
         """In-band group death: exclude it from this and all later epochs."""
@@ -409,6 +494,11 @@ class DynamicScheduler:
             if self.partitioner is not None:
                 self.partitioner.remove_group(name)
             self._cv.notify_all()
+        if self.telemetry is not None:
+            self.telemetry.registry.counter("sched.group_failures",
+                                            group=name).add()
+            self.telemetry.tracer.instant("group_failed", tid="events",
+                                          group=name, epoch=epoch.index)
 
     def _leave_epoch(self, name: str, epoch: EpochHandle) -> None:
         with self._cv:
@@ -470,3 +560,21 @@ class DynamicScheduler:
             failed_groups=list(h._failed),
         )
         h._event.set()
+        if self.telemetry is not None:
+            self.telemetry.registry.counter("sched.epochs_finalized").add()
+            self.telemetry.tracer.span(
+                f"epoch:{h.index}", "epochs", t0, h.finished_at,
+                epoch=h.index, iterations=h._result.iterations,
+                groups=list(per_items))
+
+    # -- live observability --------------------------------------------
+    def telemetry_snapshot(self) -> Optional[Dict]:
+        """Merged metrics snapshot plus the partitioner's lock-contention
+        stats — the ``runtime.telemetry_snapshot()`` live-introspection
+        API (None when built with ``telemetry=repro.telemetry.OFF``)."""
+        if self.telemetry is None:
+            return None
+        snap = self.telemetry.snapshot()
+        if self.partitioner is not None:
+            snap["contention"] = self.partitioner.contention_stats()
+        return snap

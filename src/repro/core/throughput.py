@@ -10,7 +10,7 @@ last-interval value available; ``alpha=1.0`` reproduces the paper exactly.
 from __future__ import annotations
 
 import threading
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Dict, Optional
 
 from repro.core.types import ChunkRecord
@@ -82,8 +82,12 @@ class ThroughputTracker:
             return self._seed.get(group, 1.0)
 
     def stats(self, group: str) -> Optional[GroupStats]:
+        """A *copy* of the group's stats taken under the lock — returning
+        the live object would let a reader see torn ``total_items`` /
+        ``total_time`` pairs mid-update."""
         with self._lock:
-            return self._stats.get(group)
+            st = self._stats.get(group)
+            return None if st is None else replace(st)
 
     def snapshot(self) -> Dict[str, float]:
         with self._lock:

@@ -39,6 +39,7 @@ from repro.core.energy import EnergyModel, PowerSpec
 from repro.launch.train import parse_groups
 from repro.queue import Job
 from repro.serve.engine import HeteroServeEngine
+from repro.telemetry import MetricsExporter, Telemetry
 from repro.tenancy import TenantRegistry
 
 
@@ -93,6 +94,21 @@ def main():
     ap.add_argument("--power", default=None,
                     help="per-group power 'group=active_w:idle_w,...' — "
                          "enables per-tenant energy/EDP accounting")
+    ap.add_argument("--metrics-out", default=None,
+                    help="JSONL metrics feed: one merged registry "
+                         "snapshot per --metrics-interval (tail -f "
+                         "friendly); a final snapshot is always written")
+    ap.add_argument("--metrics-interval", type=float, default=1.0,
+                    help="seconds between metric snapshots (<= 0: only "
+                         "the final snapshot)")
+    ap.add_argument("--trace-out", default=None,
+                    help="Chrome trace-event JSON of chunk-lifecycle "
+                         "spans (load in Perfetto / chrome://tracing)")
+    ap.add_argument("--prom-out", default=None,
+                    help="final Prometheus text-format dump")
+    ap.add_argument("--sample-rate", type=float, default=1.0,
+                    help="fraction of chunks traced (deterministic by "
+                         "chunk seq)")
     args = ap.parse_args()
     if args.job_items < 1:
         ap.error("--job-items must be >= 1")
@@ -139,9 +155,33 @@ def main():
                 problems.append(f"uncovered group(s) {sorted(missing)}")
             ap.error(f"--power {'; '.join(problems)}; groups are "
                      f"{sorted(group_names)}")
+    if not 0.0 <= args.sample_rate <= 1.0:
+        ap.error("--sample-rate must be in [0, 1]")
+    tel = Telemetry(sample_rate=args.sample_rate)
+    exporter = MetricsExporter(tel, metrics_path=args.metrics_out,
+                               interval_s=args.metrics_interval,
+                               trace_path=args.trace_out,
+                               prometheus_path=args.prom_out)
     eng = HeteroServeEngine(cfg, groups, prompt_len=args.prompt_len,
                             decode_tokens=args.decode_tokens,
-                            seed=args.seed, chunk_mode=args.chunk_mode)
+                            seed=args.seed, chunk_mode=args.chunk_mode,
+                            telemetry=tel)
+    exporter.start()
+    try:
+        _run(args, ap, eng, groups, registry, energy_model)
+    finally:
+        snap = exporter.stop()
+        if args.metrics_out or args.trace_out or args.prom_out:
+            print(json.dumps({
+                "telemetry": {
+                    "snapshots_written": exporter.snapshots_written,
+                    "trace_events_written": exporter.trace_events_written,
+                    "self_overhead_s":
+                        round(snap["self"]["est_overhead_s"], 6),
+                }}, indent=2))
+
+
+def _run(args, ap, eng, groups, registry, energy_model):
     if args.queue:
         # cover --requests exactly: full jobs plus a remainder job
         full, rem = divmod(args.requests, args.job_items)

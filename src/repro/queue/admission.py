@@ -48,6 +48,7 @@ from dataclasses import dataclass
 from enum import Enum
 from typing import Dict, Optional
 
+from repro import telemetry as telemetry_mod
 from repro.core.overheads import OverheadLedger
 from repro.core.throughput import ThroughputTracker
 from repro.queue.job import Job, JobState
@@ -79,7 +80,7 @@ class AdmissionController:
                  slo_delay_s: float = 1.0,
                  defer_factor: float = 4.0,
                  min_capacity: float = 1e-6,
-                 registry=None):
+                 registry=None, telemetry=None):
         self.queue = queue
         self.tracker = tracker
         self.ledger = ledger
@@ -104,6 +105,27 @@ class AdmissionController:
         self.deferred = 0
         self.rejected = 0
         self.per_tenant: Dict[str, Dict[str, int]] = {}
+        # metrics: admission.decisions{decision,tenant} counters plus a
+        # projected-delay histogram (the gate's own view of backlog)
+        self.telemetry = telemetry_mod.resolve(telemetry)
+        self._tel: Dict[tuple, object] = {}
+
+    def _tel_decision(self, decision: Decision, tenant: str,
+                      delay: float) -> None:
+        if self.telemetry is None:
+            return
+        key = (decision.value, tenant)
+        c = self._tel.get(key)
+        if c is None:
+            c = self._tel[key] = self.telemetry.registry.counter(
+                "admission.decisions", decision=decision.value,
+                tenant=tenant)
+        c.add(1)
+        h = self._tel.get("delay")
+        if h is None:
+            h = self._tel["delay"] = self.telemetry.registry.histogram(
+                "admission.projected_delay_s")
+        h.observe(delay)
 
     # -- topology events (ElasticController / scheduler failures) ------
     def on_group_join(self, name: str, lam_seed: float = 1.0) -> None:
@@ -291,6 +313,7 @@ class AdmissionController:
         self.deferred += 1
         if self.registry is not None:
             self._count(job.tenant, Decision.DEFER)
+        self._tel_decision(Decision.DEFER, job.tenant, delay)
         return AdmissionDecision(Decision.DEFER, delay, cap,
                                  tenant=job.tenant, reason=reason)
 
@@ -301,6 +324,7 @@ class AdmissionController:
         self.rejected += 1
         if self.registry is not None:
             self._count(job.tenant, Decision.REJECT)
+        self._tel_decision(Decision.REJECT, job.tenant, delay)
         return AdmissionDecision(Decision.REJECT, delay, cap,
                                  tenant=job.tenant, reason=reason)
 
@@ -315,6 +339,7 @@ class AdmissionController:
             self.admitted += 1
             if self.registry is not None:
                 self._count(job.tenant, Decision.ADMIT)
+            self._tel_decision(Decision.ADMIT, job.tenant, delay)
             return AdmissionDecision(Decision.ADMIT, delay, cap,
                                      tenant=job.tenant)
         if delay <= self.defer_factor * slo:

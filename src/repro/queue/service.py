@@ -39,6 +39,7 @@ import time
 from dataclasses import dataclass, field
 from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
+from repro import telemetry as telemetry_mod
 from repro.core.scheduler import DynamicScheduler, EpochHandle, \
     ScheduleResult
 from repro.core.types import IterationSpace
@@ -138,7 +139,8 @@ class JobService:
                  on_group_failed: Optional[Callable[[str], None]] = None,
                  pipeline_depth: int = 2, persistent: bool = True,
                  straggler: Optional["StragglerDetector"] = None,
-                 accountant=None, max_deferred: int = 10_000):
+                 accountant=None, max_deferred: int = 10_000,
+                 telemetry=None):
         self.make_scheduler = make_scheduler
         self.queue = queue or QueueManager()
         self.admission = admission
@@ -166,6 +168,47 @@ class JobService:
         self._thread: Optional[threading.Thread] = None
         self._sched: Optional[DynamicScheduler] = None
         self._inflight: Deque[_InflightBatch] = collections.deque()
+        # service-layer metrics: batch throughput counters, per-tenant
+        # queue-delay histograms, and snapshot-time gauges for the
+        # deferred pool / in-flight pipeline / queue depth
+        self.telemetry = telemetry_mod.resolve(telemetry)
+        self._tel: Dict[str, object] = {}
+        if self.telemetry is not None:
+            self.telemetry.registry.add_collector(self._collect)
+
+    # -- telemetry plumbing --------------------------------------------
+    def _counter(self, name: str, **labels):
+        key = (name,) + tuple(sorted(labels.items()))
+        c = self._tel.get(key)
+        if c is None:
+            c = self._tel[key] = self.telemetry.registry.counter(
+                name, **labels)
+        return c
+
+    def _histogram(self, name: str, **labels):
+        key = ("h", name) + tuple(sorted(labels.items()))
+        h = self._tel.get(key)
+        if h is None:
+            h = self._tel[key] = self.telemetry.registry.histogram(
+                name, **labels)
+        return h
+
+    def _collect(self) -> None:
+        reg = self.telemetry.registry
+        with self._lock:
+            deferred = len(self._deferred)
+        reg.gauge("svc.deferred_jobs").set(deferred)
+        reg.gauge("svc.inflight_batches").set(len(self._inflight))
+        try:
+            reg.gauge("svc.queue_depth").set(self.queue.depth())
+        except Exception:       # duck-typed queue without depth()
+            pass
+
+    def telemetry_snapshot(self) -> Optional[Dict]:
+        """Merged metrics snapshot, or None when uninstrumented."""
+        if self.telemetry is None:
+            return None
+        return self.telemetry.snapshot()
 
     # -- journaling ----------------------------------------------------
     def _journal(self, job: Job, event: Optional[str] = None) -> None:
@@ -334,6 +377,17 @@ class JobService:
         try:
             sched = self._scheduler()
             ib.handle = sched.submit_epoch(IterationSpace(0, total))
+            if self.telemetry is not None:
+                # register the batch's tenant composition against the
+                # epoch index BEFORE any chunk completes, so chunk spans
+                # carry tenant tags at export time (the scheduler itself
+                # conserves iteration count, not job identity)
+                tenants: Dict[str, int] = {}
+                for j in jobs:
+                    tenants[j.tenant] = tenants.get(j.tenant, 0) + j.items
+                self.telemetry.tracer.tag_epoch(
+                    ib.handle.index, {"tenants": tenants,
+                                      "jobs": len(jobs)})
         except Exception as e:          # broken factory / submit: fail the
             ib.error = e                # batch, not the daemon
             logger.exception("batch of %d jobs failed to submit", len(jobs))
@@ -392,6 +446,7 @@ class JobService:
             set_derates = getattr(self.queue, "set_weight_derates", None)
             if set_derates is not None:
                 set_derates(derates)
+        tel = self.telemetry
         for j in ib.jobs:
             if done:
                 self.queue.mark_finished(j, JobState.DONE)
@@ -401,17 +456,33 @@ class JobService:
                     if self.accountant is not None:
                         self.accountant.record_queue_delay(j.tenant,
                                                            j.queue_delay)
+                    if tel is not None:
+                        self._histogram("queue.queue_delay_s",
+                                        tenant=j.tenant) \
+                            .observe(j.queue_delay)
+                state = "done"
             elif j.attempts_left > 0:
                 self.queue.mark_finished(j, JobState.REQUEUED)
                 self.queue.requeue(j)
                 self.stats.requeues += 1
+                state = "requeued"
             else:
                 self.queue.mark_finished(j, JobState.FAILED)
                 self.stats.failed += 1
+                state = "failed"
+            if tel is not None:
+                self._counter("svc.jobs", state=state, tenant=j.tenant) \
+                    .add(1)
             self._journal(j)
         self.stats.batches += 1
         finished = clock()
         self.stats.record_window(ib.submitted_at, finished)
+        if tel is not None:
+            self._counter("svc.batches").add(1)
+            self._counter("svc.batch_items").add(min(completed, ib.total))
+            tel.tracer.span(f"batch:{self.stats.batches}", tid="service",
+                            start=ib.submitted_at, end=finished,
+                            jobs=len(ib.jobs), items=ib.total, done=done)
         return BatchReport(ib.jobs, min(completed, ib.total), ib.total,
                            list(failed_groups), res,
                            submitted_at=ib.submitted_at,

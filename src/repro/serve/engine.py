@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import telemetry as telemetry_mod
 from repro.configs.base import LMConfig
 from repro.core import (ChunkRecord, DeviceKind, DynamicScheduler, GroupSpec,
                         JaxChunkExecutor, OverheadLedger, ThroughputTracker)
@@ -66,7 +67,8 @@ class HeteroServeEngine:
     def __init__(self, cfg: LMConfig, groups: List[GroupDef],
                  prompt_len: int = 32, decode_tokens: int = 8,
                  max_len: Optional[int] = None, seed: int = 0,
-                 alpha: float = 0.5, chunk_mode: str = "range"):
+                 alpha: float = 0.5, chunk_mode: str = "range",
+                 telemetry=None):
         self.cfg = cfg
         self.groups = groups
         self.prompt_len = prompt_len
@@ -77,6 +79,10 @@ class HeteroServeEngine:
         # "range": zero-contention dispatch (private λ-share ranges with
         # work stealing); "paper": the lock-per-token baseline
         self.chunk_mode = chunk_mode
+        # one Telemetry instance threaded through every layer the engine
+        # builds (scheduler, partitioner, queue, admission, service) so
+        # metrics and spans land in a single registry/tracer
+        self.telemetry = telemetry_mod.resolve(telemetry)
         self.params = M.init_params(cfg, jax.random.PRNGKey(seed))
         self._fns: Dict[int, tuple] = {}
         # fail-injection counters persist across executors so an injected
@@ -181,7 +187,21 @@ class HeteroServeEngine:
         if not specs:
             raise RuntimeError("no live device groups")
         return DynamicScheduler(specs, execs, alpha=self.alpha,
-                                chunk_mode=self.chunk_mode)
+                                chunk_mode=self.chunk_mode,
+                                telemetry=self._tel_arg())
+
+    def _tel_arg(self):
+        """Forward the engine's resolved telemetry to a component ctor
+        (None after resolve means *uninstrumented*, so pass OFF, not
+        None — None would re-resolve to the process default)."""
+        return self.telemetry if self.telemetry is not None \
+            else telemetry_mod.OFF
+
+    def telemetry_snapshot(self) -> Optional[Dict]:
+        """Merged metrics + trace snapshot, or None when uninstrumented."""
+        if self.telemetry is None:
+            return None
+        return self.telemetry.snapshot()
 
     def serve(self, n_requests: int) -> ServeReport:
         sched = self._build_scheduler(max_chunk=n_requests)
@@ -245,7 +265,7 @@ class HeteroServeEngine:
 
         accountant = None
         if tenants is not None:
-            queue = ShardedQueueManager(tenants)
+            queue = ShardedQueueManager(tenants, telemetry=self._tel_arg())
             accountant = TenantAccountant(tenants,
                                           energy_model=energy_model)
         else:
@@ -261,7 +281,7 @@ class HeteroServeEngine:
                 queue, tracker, ledger,
                 slo_delay_s=slo_delay_s if slo_delay_s is not None
                 else float("inf"),
-                registry=tenants)
+                registry=tenants, telemetry=self._tel_arg())
             for g in self.groups:
                 admission.on_group_join(g.name, 1.0)
         journal = JournalStore(journal_path) if journal_path else None
@@ -271,7 +291,8 @@ class HeteroServeEngine:
                              on_group_failed=dead.add,
                              pipeline_depth=pipeline_depth,
                              persistent=persistent,
-                             accountant=accountant)
+                             accountant=accountant,
+                             telemetry=self._tel_arg())
         t0 = time.monotonic()
         for job in jobs:
             service.submit(job)

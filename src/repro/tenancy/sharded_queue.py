@@ -50,12 +50,13 @@ import threading
 import time
 from typing import Dict, List, Optional
 
+from repro import telemetry as telemetry_mod
 from repro.queue.job import Job, JobState
 from repro.queue.manager import QueueManager, drain_with_deadline
 
 
 class ShardedQueueManager:
-    def __init__(self, registry=None, quantum: int = 64):
+    def __init__(self, registry=None, quantum: int = 64, telemetry=None):
         # ``registry`` is duck-typed (TenantRegistry: .get(name).weight /
         # .max_inflight); None means every tenant weighs 1 and has no quota
         self.registry = registry
@@ -72,6 +73,37 @@ class ShardedQueueManager:
         self._derate: Dict[str, float] = {}      # energy-budget factors
         self._lock = threading.RLock()
         self._not_empty = threading.Condition(self._lock)
+        # metrics: DWRR pick counters per tenant on the drain path, plus a
+        # collector publishing per-tenant depth/backlog gauges at snapshot
+        # time (pull, not push — depth reads never ride the hot path)
+        self.telemetry = telemetry_mod.resolve(telemetry)
+        self._tel: Dict[tuple, object] = {}
+        if self.telemetry is not None:
+            self.telemetry.registry.add_collector(self._collect)
+
+    # -- telemetry plumbing ---------------------------------------------
+    def _tel_pop(self, tenant: str, items: int) -> None:
+        key = ("pop", tenant)
+        c = self._tel.get(key)
+        if c is None:
+            reg = self.telemetry.registry
+            c = self._tel[key] = (
+                reg.counter("queue.dwrr_pops", tenant=tenant),
+                reg.counter("queue.dwrr_items", tenant=tenant))
+        c[0].add(1)
+        c[1].add(items)
+
+    def _collect(self) -> None:
+        reg = self.telemetry.registry
+        with self._lock:
+            rows = [(t, self._shards[t].depth(),
+                     self._shards[t].backlog_items(),
+                     len(self._popped.get(t, ())))
+                    for t in self._order]
+        for tenant, depth, backlog, outstanding in rows:
+            reg.gauge("queue.depth", tenant=tenant).set(depth)
+            reg.gauge("queue.backlog_items", tenant=tenant).set(backlog)
+            reg.gauge("queue.outstanding", tenant=tenant).set(outstanding)
 
     # -- tenant plumbing ------------------------------------------------
     def _shard(self, tenant: str) -> QueueManager:
@@ -242,6 +274,8 @@ class ShardedQueueManager:
             job = self._shards[tenant].pop()
             if job is not None:
                 self._popped[tenant].add(job.job_id)
+                if self.telemetry is not None:
+                    self._tel_pop(tenant, job.items)
             return job
         return None                         # unreachable by construction
 

@@ -1,0 +1,60 @@
+"""Property tests for the sharded histogram (requires hypothesis).
+
+The container image may not ship hypothesis; these skip cleanly then —
+the deterministic equivalents in tests/test_telemetry.py always run.
+"""
+import threading
+
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings, strategies as st
+
+from repro.telemetry import MetricsRegistry
+
+finite = st.floats(min_value=1e-9, max_value=1e6, allow_nan=False,
+                   allow_infinity=False)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(finite, min_size=1, max_size=200),
+       st.integers(min_value=1, max_value=8))
+def test_shard_merge_equals_single_shard_ingest(values, n_threads):
+    ref = MetricsRegistry().histogram("ref")
+    for v in values:
+        ref.observe(v)
+
+    sharded = MetricsRegistry().histogram("sharded")
+    parts = [values[i::n_threads] for i in range(n_threads)]
+
+    def work(part):
+        for v in part:
+            sharded.observe(v)
+
+    threads = [threading.Thread(target=work, args=(p,)) for p in parts]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+
+    a, b = ref.merged(), sharded.merged()
+    assert a["buckets"] == b["buckets"]
+    assert a["count"] == b["count"] == len(values)
+    assert a["min"] == b["min"] and a["max"] == b["max"]
+    assert a["sum"] == pytest.approx(b["sum"])
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(finite, min_size=1, max_size=200),
+       st.floats(min_value=0.0, max_value=1.0))
+def test_quantile_within_bucket_error_bound(values, q):
+    h = MetricsRegistry().histogram("lat")
+    for v in values:
+        h.observe(v)
+    true = sorted(values)[int(q * (len(values) - 1))]
+    est = h.quantile(q)
+    # log-bucketed growth 2**0.25: the estimate is the upper bound of the
+    # true value's bucket — never below it, at most one growth factor above
+    assert est >= true * (1 - 1e-9)
+    assert est <= true * (2 ** 0.25) * (1 + 1e-9)
