@@ -34,7 +34,7 @@ def main() -> None:
                          "contains one of the comma-separated substrings "
                          "(e.g. batch_boundary, queue_saturation, "
                          "tenant_fairness, fig7, dispatch_overhead,"
-                         "telemetry_overhead, realexec — or "
+                         "telemetry_overhead, latency_tiers, realexec — or "
                          "'dispatch_overhead,telemetry_overhead')")
     ap.add_argument("--quick", action="store_true",
                     help="tiny-size smoke profile: runs only the suites "
@@ -46,13 +46,15 @@ def main() -> None:
     from benchmarks.batch_boundary import ALL as BOUNDARY
     from benchmarks.dispatch_overhead import ALL as DISPATCH, \
         QUICK as DISPATCH_QUICK
+    from benchmarks.latency_tiers import ALL as LATENCY
     from benchmarks.paper_figures import ALL as PAPER
     from benchmarks.queue_saturation import ALL as QUEUE
     from benchmarks.telemetry_overhead import ALL as TELEMETRY, \
         QUICK as TELEMETRY_QUICK
     from benchmarks.tenant_fairness import ALL as TENANT
 
-    everything = PAPER + QUEUE + BOUNDARY + TENANT + DISPATCH + TELEMETRY
+    everything = PAPER + QUEUE + BOUNDARY + TENANT + DISPATCH \
+        + TELEMETRY + LATENCY
     if args.quick:
         everything = DISPATCH_QUICK + TELEMETRY_QUICK
     wanted = [s.strip() for s in args.only.split(",") if s.strip()] \

@@ -10,8 +10,11 @@
 # hot paths (and the telemetry-overhead ratio gate, which fails hard if
 # instrumentation cost creeps back onto the hot path); stage 4 is the
 # telemetry stage — a queued serve with --metrics-out whose JSONL feed is
-# validated for the key metric families; stage 5 runs everything else
-# except the slow-marked integration / model-compile tests.
+# validated for the key metric families; stage 5 is the preemption stage
+# — a mixed-tier queued serve (express lane on) whose metrics must show
+# express batches forming, then a tight-deadline serve whose metrics
+# must show the deadline-miss counter firing; stage 6 runs everything
+# else except the slow-marked integration / model-compile tests.
 # Full suite: `python -m pytest -q`.
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -47,6 +50,28 @@ assert any(e.get("cat") == "chunk" for e in trace["traceEvents"]), \
     "no chunk spans in trace"
 print(f"telemetry smoke ok: {len(snaps)} snapshots, "
       f"{len(trace['traceEvents'])} trace events")
+EOF
+python -m repro.launch.serve --arch yi-6b --reduced --queue \
+  --requests 16 --job-items 2 --priority mix \
+  --metrics-out "$SMOKE_TMP/preempt.jsonl" --metrics-interval 0.2 \
+  > /dev/null
+python -m repro.launch.serve --arch yi-6b --reduced --queue \
+  --requests 16 --job-items 2 --deadline-ms 0.5 \
+  --metrics-out "$SMOKE_TMP/deadline.jsonl" --metrics-interval 0.2 \
+  > /dev/null
+python - "$SMOKE_TMP" <<'EOF'
+import sys
+from pathlib import Path
+from repro.telemetry import read_jsonl
+tmp = Path(sys.argv[1])
+c = read_jsonl(tmp / "preempt.jsonl")[-1]["counters"]
+express = sum(v for k, v in c.items() if k.startswith("svc.express_batches"))
+assert express > 0, f"mixed-tier serve formed no express batches: {sorted(c)}"
+c = read_jsonl(tmp / "deadline.jsonl")[-1]["counters"]
+misses = sum(v for k, v in c.items() if k.startswith("svc.deadline_misses"))
+assert misses > 0, f"0.5ms-deadline serve missed no deadlines: {sorted(c)}"
+print(f"preemption smoke ok: {express:.0f} express batches, "
+      f"{misses:.0f} deadline misses")
 EOF
 exec python -m pytest -q -m "not slow" \
   --ignore=tests/test_scheduler.py --ignore=tests/test_partitioner.py \

@@ -62,6 +62,14 @@ class ChunkExecutor:
     def drain(self) -> List[ChunkRecord]:
         return []
 
+    def cancel(self) -> List[ChunkRecord]:
+        """Cooperative wind-down for epoch cancellation: return whatever
+        already finished *without* waiting for the rest of the pipeline —
+        still-running chunks stay in flight for ``abort()`` to hand back
+        as requeue candidates. Synchronous executors have nothing in
+        flight, so the default is a plain drain."""
+        return self.drain()
+
     def abort(self) -> List[Chunk]:
         """Drop any in-flight work; returns the chunks to requeue."""
         return []
@@ -243,6 +251,29 @@ class JaxChunkExecutor(ChunkExecutor):
             raise
         return out
 
+    def cancel(self) -> List[ChunkRecord]:
+        """Cancellation wind-down: complete only the chunks whose outputs
+        are already ready (free — no wait), leaving genuinely in-flight
+        device work queued for ``abort()``/requeue. Without a readiness
+        probe (block mode / old jax) there is no way to tell done from
+        running, so fall back to a full drain — the submitted work is
+        finishing on the device either way; draining just keeps its
+        records instead of discarding real results."""
+        out = self._pending_done
+        self._pending_done = []
+        try:
+            if not self._polling():
+                while self._inflight:
+                    out.append(self._complete_oldest())
+            else:
+                while self._inflight \
+                        and self._is_ready(self._inflight[0][1]):
+                    out.append(self._complete_oldest(known_ready=True))
+        except BaseException:
+            self._pending_done = out      # keep finished records visible
+            raise
+        return out
+
     def abort(self) -> List[Chunk]:
         chunks = self._lost_chunks
         chunks += [rec.token.chunk for rec, _ in self._inflight]
@@ -263,12 +294,19 @@ class SleepExecutor(ChunkExecutor):
 
     def __init__(self, rate: float, t_hd: float = 0.0, t_kl: float = 0.0,
                  t_dh: float = 0.0, fail_after: Optional[int] = None,
-                 slow_after: Optional[int] = None, slow_factor: float = 10.0):
+                 slow_after: Optional[int] = None, slow_factor: float = 10.0,
+                 clock: Optional[Callable[[], float]] = None,
+                 sleep: Optional[Callable[[float], None]] = None):
         self.rate = rate
         self.t_hd, self.t_kl, self.t_dh = t_hd, t_kl, t_dh
         self.fail_after = fail_after
         self.slow_after = slow_after
         self.slow_factor = slow_factor
+        # injectable time source/sink: the deterministic test harness
+        # (tests/clock.py VirtualClock) substitutes both so simulated
+        # service time advances a virtual timeline instead of the wall
+        self.clock = clock if clock is not None else globals()["clock"]
+        self.sleep = sleep if sleep is not None else time.sleep
         self._count = 0
 
     def execute(self, token: Token, rec: ChunkRecord) -> List[ChunkRecord]:
@@ -282,17 +320,17 @@ class SleepExecutor(ChunkExecutor):
         # (~µs each, up to four per chunk), real overhead a *simulated*
         # run must not pay on its host-path measurements
         service = token.chunk.size / rate
-        rec.tg1 = clock()
+        rec.tg1 = self.clock()
         if self.t_hd:
-            time.sleep(self.t_hd)
-        rec.tg2 = clock()
+            self.sleep(self.t_hd)
+        rec.tg2 = self.clock()
         if self.t_kl:
-            time.sleep(self.t_kl)
-        rec.tg3 = clock()
+            self.sleep(self.t_kl)
+        rec.tg3 = self.clock()
         if service:
-            time.sleep(service)
-        rec.tg4 = clock()
+            self.sleep(service)
+        rec.tg4 = self.clock()
         if self.t_dh:
-            time.sleep(self.t_dh)
-        rec.tg5 = clock()
+            self.sleep(self.t_dh)
+        rec.tg5 = self.clock()
         return [rec]

@@ -180,6 +180,50 @@ class HeterogeneousPartitioner:
                             "range_reclaim", tid="partitioner",
                             group=name, items=leftover)
 
+    def has_work(self, space: IterationSpace) -> bool:
+        """Whether ``space`` still has takeable work: unassigned items or
+        (range mode) an unconsumed private range some group could steal
+        from. Lock-free racy read — the scheduler uses it only to decide
+        where an idle dispatcher goes next, and next_token re-checks
+        under the proper locks."""
+        if space.remaining > 0:
+            return True
+        if self.chunk_mode == "paper":
+            return False
+        ranges = self._ranges.get(space)
+        if not ranges:
+            return False
+        return any(st.hi > st.lo for st in ranges.values())
+
+    def reclaim_space(self, space: IterationSpace) -> int:
+        """Epoch cancellation: return *every* group's unconsumed private
+        range for ``space`` back to it (count conservation, same semantics
+        as ``requeue``/``remove_group``), so the cancelled epoch's
+        unfinished tail is visible as ``space.remaining`` — the unit the
+        service's requeue accounting works in. Groups keep their ranges in
+        every *other* space; a chunk a dispatcher carved out concurrently
+        is already out of the range and will simply complete (cooperative
+        cancellation is chunk-granular). Returns the reclaimed item
+        count."""
+        total = 0
+        with self._lock:
+            ranges = self._ranges.get(space)
+            if not ranges:
+                return 0
+            for name, st in ranges.items():
+                with st.lock:
+                    leftover = st.hi - st.lo
+                    st.lo = st.hi
+                if leftover > 0:
+                    space.put_back(Chunk(0, leftover))
+                    total += leftover
+        if total and self.telemetry is not None:
+            self._count("part.reclaims")
+            self._count("part.reclaimed_items", total)
+            self.telemetry.tracer.instant("cancel_reclaim",
+                                          tid="partitioner", items=total)
+        return total
+
     # ------------------------------------------------------------------
     def chunk_size_for(self, name: str) -> int:
         g = self.groups[name]

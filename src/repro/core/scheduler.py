@@ -47,7 +47,12 @@ from repro.core.dispatch import ChunkExecutor, ChunkFailure, clock
 from repro.core.overheads import OverheadLedger
 from repro.core.partitioner import HeterogeneousPartitioner
 from repro.core.throughput import ThroughputTracker
-from repro.core.types import ChunkRecord, GroupSpec, IterationSpace
+from repro.core.types import ChunkRecord, GroupSpec, IterationSpace, \
+    tier_rank
+
+#: rank sentinel meaning "no runnable epoch": above every real tier rank,
+#: so the preempt check `_preempt_rank < epoch.rank` is always False
+_NO_RANK = 1 << 10
 
 
 @dataclass
@@ -59,6 +64,13 @@ class ScheduleResult:
     throughput: Dict[str, float]
     per_group_items: Dict[str, int]
     failed_groups: List[str] = field(default_factory=list)
+    # latency-tier support: a cooperatively cancelled epoch finalizes with
+    # ``cancelled=True`` and its undone tail in ``unfinished`` (completed
+    # + unfinished == submitted items when no chunk re-executed), so the
+    # service can requeue exactly what was cut off
+    cancelled: bool = False
+    cancel_reason: str = ""
+    unfinished: int = 0
 
     def busy_seconds(self) -> Dict[str, float]:
         busy: Dict[str, float] = {}
@@ -75,12 +87,27 @@ class EpochHandle:
     ``finished_at`` are monotonic-clock stamps; the gap between one epoch's
     ``finished_at`` and the next epoch's ``started_at`` is the batch-boundary
     overhead benchmarks/batch_boundary.py measures.
+
+    ``priority`` is a latency tier (core.types.TIERS): dispatchers always
+    pick the best-(rank, index) open epoch with takeable work, so an
+    urgent epoch jumps queued standard/batch work and *preempts* running
+    lower-tier epochs at their next chunk boundary. ``deadline_s`` is an
+    absolute scheduler-clock deadline; blowing it cancels the epoch
+    cooperatively (see DynamicScheduler.cancel_epoch).
     """
 
-    def __init__(self, index: int, space: IterationSpace):
+    def __init__(self, index: int, space: IterationSpace,
+                 priority: str = "standard",
+                 deadline_s: Optional[float] = None,
+                 now: Optional[float] = None):
         self.index = index
         self.space = space
-        self.submitted_at = clock()
+        self.priority = priority
+        self.rank = tier_rank(priority)
+        self.deadline_s = deadline_s
+        self.cancelled = False
+        self.cancel_reason: Optional[str] = None
+        self.submitted_at = now if now is not None else clock()
         self.started_at: Optional[float] = None
         self.finished_at: Optional[float] = None
         self.ledger = OverheadLedger()          # per-epoch §3.3 fractions
@@ -111,10 +138,13 @@ class DynamicScheduler:
                  executors: Dict[str, ChunkExecutor],
                  alpha: float = 1.0, base_quantum: int = 256,
                  chunk_mode: str = "range", finalize_batch: int = 8,
-                 telemetry=None):
+                 telemetry=None, clock=None):
         assert set(groups) == set(executors)
         self.specs = dict(groups)
         self.executors = dict(executors)
+        # injectable time source (tests/clock.py VirtualClock): every
+        # scheduler-side stamp and deadline comparison goes through it
+        self.clock = clock if clock is not None else globals()["clock"]
         self.alpha = alpha
         self.base_quantum = base_quantum
         self.chunk_mode = chunk_mode
@@ -160,6 +190,12 @@ class DynamicScheduler:
         # past E (otherwise a thread that has not reached E yet could still
         # absorb E's requeued work)
         self._worker_pos: Dict[str, int] = {}
+        # best (lowest) tier rank among open epochs with takeable work —
+        # the lock-free preemption hint workers read at every chunk
+        # boundary. Recomputed under _cv at every queue-shape change and
+        # repaired by _await_epoch, so staleness only costs a spurious
+        # drain/re-enter, never a missed wakeup.
+        self._preempt_rank = _NO_RANK
         self._failed: List[str] = []
         self._started = False
         self._shutdown = False
@@ -189,29 +225,73 @@ class DynamicScheduler:
         self._threads[name] = th
         th.start()
 
-    def submit_epoch(self, space: Union[IterationSpace, Tuple[int, int]]) \
-            -> EpochHandle:
-        """Enqueue an iteration space for the dispatcher threads."""
+    def submit_epoch(self, space: Union[IterationSpace, Tuple[int, int]],
+                     priority: str = "standard",
+                     deadline_s: Optional[float] = None) -> EpochHandle:
+        """Enqueue an iteration space for the dispatcher threads.
+
+        ``priority`` is a latency tier (``urgent``/``standard``/``batch``):
+        dispatchers enter the best-(rank, submission-order) open epoch
+        with work, so an urgent epoch overtakes queued lower-tier epochs
+        and pulls workers out of running ones at their next chunk
+        boundary. ``deadline_s`` is an absolute deadline on this
+        scheduler's clock; an epoch past it is cancelled cooperatively
+        and finalizes with its unfinished tail counted."""
         if isinstance(space, tuple):
             space = IterationSpace(*space)
         self.start()
         with self._cv:
             if self._shutdown:
                 raise RuntimeError("scheduler runtime is shut down")
-            handle = EpochHandle(self._epoch_base + len(self._epochs), space)
+            handle = EpochHandle(self._epoch_base + len(self._epochs),
+                                 space, priority=priority,
+                                 deadline_s=deadline_s, now=self.clock())
             self._epochs.append(handle)
             self.partitioner.begin_epoch(space)
+            self._recompute_preempt_locked()
             if self.telemetry is not None:
                 self.telemetry.registry.counter(
-                    "sched.epochs_submitted").add()
+                    "sched.epochs_submitted", tier=priority).add()
                 self.telemetry.tracer.instant(
                     "epoch_submit", tid="epochs", epoch=handle.index,
-                    items=space.remaining)
+                    items=space.remaining, tier=priority)
             if not self._worker_pos:        # every group already dead
                 self._finalize_epoch_locked(handle)
                 self._prune_epochs_locked()
             self._cv.notify_all()
         return handle
+
+    def cancel_epoch(self, handle: EpochHandle,
+                     reason: str = "cancelled") -> bool:
+        """Cooperatively cancel an epoch: flag it, reclaim every group's
+        unconsumed private range back into its space (the unfinished tail
+        then shows up as ``space.remaining`` → ``result.unfinished``), and
+        wake the dispatchers — workers inside notice at their next chunk
+        boundary, wind down the executor pipeline (completing what is
+        already finished, requeueing the rest), and leave. Completed work
+        is never retracted: returns False if the epoch already finalized
+        (or was already cancelled), and a chunk in flight at the flag
+        check completes and is counted (cancellation is chunk-granular).
+        """
+        with self._cv:
+            if handle.finalized or handle.cancelled:
+                return False
+            handle.cancelled = True
+            handle.cancel_reason = reason
+            if self.partitioner is not None:
+                self.partitioner.reclaim_space(handle.space)
+            self._recompute_preempt_locked()
+            self._maybe_finalize_locked(handle)
+            self._prune_epochs_locked()
+            self._cv.notify_all()
+        if self.telemetry is not None:
+            self.telemetry.registry.counter("sched.epochs_cancelled",
+                                            reason=reason).add()
+            self.telemetry.tracer.instant(
+                "epoch_cancel", tid="epochs", epoch=handle.index,
+                reason=reason, tier=handle.priority,
+                unfinished=handle.space.remaining)
+        return True
 
     def shutdown(self, wait: bool = True) -> None:
         """Drain queued epochs, then stop and join dispatcher threads."""
@@ -311,33 +391,60 @@ class DynamicScheduler:
         finally:
             self._retire_worker(name)
 
+    def _best_open_locked(self) -> Optional[EpochHandle]:
+        """Best-(tier rank, submission order) open epoch with takeable
+        work — where an idle dispatcher should go. "Takeable" includes
+        another group's unconsumed private range (the end-of-space steal
+        source), so priority never disables work stealing."""
+        part = self.partitioner
+        best = None
+        for h in self._epochs:
+            if h.finalized or h.cancelled:
+                continue
+            if best is not None and h.rank >= best.rank:
+                continue                    # _epochs is submission-ordered
+            if h.space.remaining > 0 or (part is not None
+                                         and part.has_work(h.space)):
+                best = h
+        return best
+
+    def _recompute_preempt_locked(self) -> None:
+        best = self._best_open_locked()
+        self._preempt_rank = best.rank if best is not None else _NO_RANK
+
     def _await_epoch(self, name: str, idx: int) -> Optional[EpochHandle]:
-        """Block until epoch ``idx`` (or a later open one) is available;
-        None on shutdown / group removal. Entering is atomic with the
-        finalized check so no records land on a finalized epoch. A worker
-        also *revisits* an older open epoch whose space regained work (a
-        failure requeued chunks after this worker had already left it) —
-        without that, work requeued after the other dispatchers moved on
-        would never be drained."""
+        """Block until an epoch is available; None on shutdown / group
+        removal. Entering is atomic with the finalized check so no
+        records land on a finalized epoch.
+
+        Epoch choice is priority-first: the best-(rank, index) open epoch
+        with takeable work wins, wherever it sits relative to this
+        worker's last position — an urgent epoch submitted late overtakes
+        queued standard work, and a worker *revisits* an older open epoch
+        whose space regained work (a failure requeued chunks after this
+        worker had already left it). With no runnable epoch the worker
+        walks forward past finalized ones so exhausted-but-open epochs
+        behind it can finalize."""
         with self._cv:
             while True:
                 if name not in self.specs:
                     return None
                 idx = max(idx, self._epoch_base)
-                for h in self._epochs:
-                    if h.index >= idx:
-                        break
-                    if not h.finalized and h.space.remaining > 0:
-                        idx = h.index
-                        break
-                while idx - self._epoch_base < len(self._epochs) \
-                        and self._epochs[idx - self._epoch_base].finalized:
-                    idx += 1
+                best = self._best_open_locked()
+                self._preempt_rank = best.rank if best is not None \
+                    else _NO_RANK
+                if best is not None:
+                    idx = best.index
+                else:
+                    while idx - self._epoch_base < len(self._epochs) \
+                            and self._epochs[idx
+                                             - self._epoch_base].finalized:
+                        idx += 1
                 self._worker_pos[name] = idx
                 if idx - self._epoch_base < len(self._epochs):
                     epoch = self._epochs[idx - self._epoch_base]
                     if epoch.started_at is None:
-                        epoch.started_at = clock()
+                        epoch.started_at = self.clock()
                     return epoch
                 if self._shutdown:
                     return None
@@ -357,11 +464,25 @@ class DynamicScheduler:
         space = epoch.space
         buf: List[ChunkRecord] = []
         ok = True
+        preempted = False
         try:
             while True:
-                tc1 = clock()
+                # chunk-boundary checks, cheapest first: the cancellation
+                # flag and the preemption hint are plain attribute reads
+                # (no lock); the deadline comparison reads the clock only
+                # when a deadline is actually set
+                if epoch.cancelled:
+                    return self._wind_down_cancelled(name, ex, epoch, buf)
+                if epoch.deadline_s is not None \
+                        and self.clock() > epoch.deadline_s:
+                    self.cancel_epoch(epoch, reason="deadline")
+                    continue                # re-check hits the cancel path
+                if self._preempt_rank < epoch.rank:
+                    preempted = True        # a more urgent epoch has work:
+                    break                   # drain the pipeline and jump
+                tc1 = self.clock()
                 token = part.next_token(name, space)
-                tc2 = clock()
+                tc2 = self.clock()
                 if token is None:
                     break
                 rec = ChunkRecord(token, tc1=tc1, tc2=tc2)
@@ -392,6 +513,12 @@ class DynamicScheduler:
                 self._finalize(buf, epoch)
                 self._mark_failed(name, epoch)
                 return False
+            if preempted and self.telemetry is not None:
+                self.telemetry.registry.counter(
+                    "sched.preemptions", group=name).add()
+                self.telemetry.tracer.instant(
+                    "preempt", tid="events", group=name, epoch=epoch.index,
+                    tier=epoch.priority)
         except BaseException:
             ok = False
             raise
@@ -399,6 +526,29 @@ class DynamicScheduler:
             self._finalize(buf, epoch)
             self._leave_epoch(name, epoch)
         return ok
+
+    def _wind_down_cancelled(self, name: str, ex: ChunkExecutor,
+                             epoch: EpochHandle,
+                             buf: List[ChunkRecord]) -> bool:
+        """Cancellation wind-down at a chunk boundary: keep what already
+        finished (ex.cancel completes ready work without waiting on the
+        rest), requeue the still-in-flight chunks into the epoch's space
+        — joining the tail cancel_epoch already reclaimed — and leave.
+        Runs inside _run_epoch's try, so the caller's ``finally`` still
+        flushes ``buf`` and leaves the epoch."""
+        part = self.partitioner
+        try:
+            self._stamp_tc3(ex.cancel(), buf)
+        except ChunkFailure:
+            self._stamp_tc3(ex.completed(), buf)
+            for chunk in ex.abort():
+                part.requeue(chunk, epoch.space)
+            self._finalize(buf, epoch)
+            self._mark_failed(name, epoch)
+            return False
+        for chunk in ex.abort():
+            part.requeue(chunk, epoch.space)
+        return True
 
     def _stamp_tc3(self, done: List[ChunkRecord],
                    buf: List[ChunkRecord]) -> None:
@@ -413,7 +563,7 @@ class DynamicScheduler:
         the fallback for synchronous executors only."""
         if not done:
             return
-        t = clock()
+        t = self.clock()
         for rec in done:
             if rec.tc3 == 0.0:
                 rec.tc3 = t
@@ -505,6 +655,7 @@ class DynamicScheduler:
             self._worker_pos[name] = epoch.index + 1
             self._maybe_finalize_locked(epoch)
             self._prune_epochs_locked()
+            self._recompute_preempt_locked()
             self._cv.notify_all()
 
     def _retire_worker(self, name: str) -> None:
@@ -516,15 +667,26 @@ class DynamicScheduler:
                 if not h.finalized:
                     self._maybe_finalize_locked(h)
             self._prune_epochs_locked()
+            self._recompute_preempt_locked()
             self._cv.notify_all()
 
     # -- epoch finalization --------------------------------------------
     def _maybe_finalize_locked(self, epoch: EpochHandle) -> None:
         if epoch.finalized:
             return
-        if self._worker_pos and epoch.space.remaining > 0:
-            # a failure requeued work into this epoch; a live dispatcher
-            # will scan back and drain it (see _await_epoch)
+        if self._worker_pos and not epoch.cancelled \
+                and (epoch.space.remaining > 0
+                     or (self.partitioner is not None
+                         and self.partitioner.has_work(epoch.space))):
+            # Work is still reachable: a failure requeued items into the
+            # space, or (range mode) a preempted dispatcher left its
+            # claimed-but-unconsumed private range behind — invisible to
+            # ``space.remaining`` but found by ``has_work``, the same
+            # test _best_open_locked routes idle dispatchers with. A
+            # live dispatcher will scan back and drain it (see
+            # _await_epoch). A cancelled epoch finalizes *with* its
+            # unfinished tail — that tail is the caller's to requeue,
+            # not the dispatchers'.
             return
         if all(pos > epoch.index for pos in self._worker_pos.values()):
             self._finalize_epoch_locked(epoch)
@@ -540,7 +702,7 @@ class DynamicScheduler:
             self._epoch_base += 1
 
     def _finalize_epoch_locked(self, h: EpochHandle) -> None:
-        h.finished_at = clock()
+        h.finished_at = self.clock()
         t0 = h.started_at if h.started_at is not None else h.submitted_at
         total = max(h.finished_at - t0, 0.0)
         per_items: Dict[str, int] = {}
@@ -558,6 +720,9 @@ class DynamicScheduler:
             throughput=self.tracker.snapshot(),
             per_group_items=per_items,
             failed_groups=list(h._failed),
+            cancelled=h.cancelled,
+            cancel_reason=h.cancel_reason or "",
+            unfinished=h.space.remaining,
         )
         h._event.set()
         if self.telemetry is not None:
@@ -565,7 +730,8 @@ class DynamicScheduler:
             self.telemetry.tracer.span(
                 f"epoch:{h.index}", "epochs", t0, h.finished_at,
                 epoch=h.index, iterations=h._result.iterations,
-                groups=list(per_items))
+                groups=list(per_items), tier=h.priority,
+                cancelled=h.cancelled)
 
     # -- live observability --------------------------------------------
     def telemetry_snapshot(self) -> Optional[Dict]:

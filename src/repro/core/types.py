@@ -18,6 +18,24 @@ class DeviceKind(str, Enum):
     LITTLE = "little"   # the paper's A7
 
 
+#: Latency tiers, best-first. An epoch's (or job's) tier decides queue
+#: order everywhere a choice exists: the scheduler's epoch queue, the
+#: per-tenant job heaps, and the service's express lane. Rank is the
+#: comparison key (lower = more urgent).
+TIERS = ("urgent", "standard", "batch")
+TIER_RANK = {t: i for i, t in enumerate(TIERS)}
+
+
+def tier_rank(tier: str) -> int:
+    """Rank for a tier name; raises on unknown tiers so a typo'd job spec
+    fails at submission, not as a silently mid-priority job."""
+    try:
+        return TIER_RANK[tier]
+    except KeyError:
+        raise ValueError(f"unknown tier {tier!r}; expected one of {TIERS}") \
+            from None
+
+
 @dataclass(frozen=True)
 class Chunk:
     """A [begin, end) sub-range of the iteration space."""

@@ -36,6 +36,7 @@ import json
 from repro.configs.base import reduced
 from repro.configs.registry import get_config
 from repro.core.energy import EnergyModel, PowerSpec
+from repro.core.types import TIERS
 from repro.launch.train import parse_groups
 from repro.queue import Job
 from repro.serve.engine import HeteroServeEngine
@@ -78,6 +79,17 @@ def main():
     ap.add_argument("--slo", type=float, default=None,
                     help="queue-delay SLO seconds (enables admission "
                          "backpressure in --queue mode)")
+    ap.add_argument("--priority", default="standard",
+                    choices=["urgent", "standard", "batch", "mix"],
+                    help="latency tier for queued jobs; 'mix' cycles "
+                         "urgent/standard/batch across jobs")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-job latency budget in ms (--queue mode); "
+                         "jobs past it are shed at pop and in-flight "
+                         "batches past it are cancelled cooperatively")
+    ap.add_argument("--no-express", action="store_true",
+                    help="disable the urgent-tier express lane "
+                         "(baseline: urgent jobs wait out the pipeline)")
     ap.add_argument("--journal", default=None,
                     help="JSONL journal path for durable job state")
     ap.add_argument("--pipeline-depth", type=int, default=2,
@@ -112,6 +124,8 @@ def main():
     args = ap.parse_args()
     if args.job_items < 1:
         ap.error("--job-items must be >= 1")
+    if args.deadline_ms is not None and args.deadline_ms <= 0:
+        ap.error("--deadline-ms must be > 0")
     if args.requests < 1:
         ap.error("--requests must be >= 1")
     if (args.tenants or args.tenants_file) and not args.queue:
@@ -187,14 +201,21 @@ def _run(args, ap, eng, groups, registry, energy_model):
         full, rem = divmod(args.requests, args.job_items)
         sizes = [args.job_items] * full + ([rem] if rem else [])
         names = registry.names() if registry is not None else ["default"]
-        jobs = [Job(items=n, priority=i % 3, tenant=names[i % len(names)])
+        deadline_s = args.deadline_ms / 1000.0 \
+            if args.deadline_ms is not None else None
+        jobs = [Job(items=n, priority=i % 3,
+                    tier=TIERS[i % len(TIERS)] if args.priority == "mix"
+                    else args.priority,
+                    deadline_s=deadline_s,
+                    tenant=names[i % len(names)])
                 for i, n in enumerate(sizes)]
         rep = eng.serve_jobs(jobs, slo_delay_s=args.slo,
                              batch_jobs=args.batch_jobs,
                              journal_path=args.journal,
                              pipeline_depth=args.pipeline_depth,
                              persistent=not args.rebuild_per_batch,
-                             tenants=registry, energy_model=energy_model)
+                             tenants=registry, energy_model=energy_model,
+                             express=not args.no_express)
         out = {
             "jobs": rep.jobs, "done": rep.done, "failed": rep.failed,
             "cancelled": rep.cancelled, "requeues": rep.requeues,
@@ -205,6 +226,9 @@ def _run(args, ap, eng, groups, registry, energy_model):
                               for k, v in rep.queue_delay.items()},
             "per_group": rep.per_group_items,
             "dead_groups": rep.dead_groups,
+            "deadline_misses": rep.deadline_misses,
+            "express_batches": rep.express_batches,
+            "cancelled_batches": rep.cancelled_batches,
         }
         if rep.per_tenant:
             out["per_tenant"] = {

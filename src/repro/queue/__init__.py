@@ -9,7 +9,7 @@ group failures.
 """
 from repro.queue.job import (TERMINAL, TRANSITIONS, IllegalTransition, Job,
                              JobState)
-from repro.queue.manager import QueueManager
+from repro.queue.manager import EXPRESS_RANK, QueueManager
 from repro.queue.admission import (AdmissionController, AdmissionDecision,
                                    Decision)
 from repro.queue.journal import JournalStore
@@ -18,7 +18,8 @@ from repro.queue.service import (BatchReport, JobService, ServiceStats,
 
 __all__ = [
     "TERMINAL", "TRANSITIONS", "IllegalTransition", "Job", "JobState",
-    "QueueManager", "AdmissionController", "AdmissionDecision", "Decision",
+    "EXPRESS_RANK", "QueueManager",
+    "AdmissionController", "AdmissionDecision", "Decision",
     "JournalStore", "BatchReport", "JobService", "ServiceStats",
     "percentiles",
 ]

@@ -51,6 +51,7 @@ from typing import Dict, Optional
 from repro import telemetry as telemetry_mod
 from repro.core.overheads import OverheadLedger
 from repro.core.throughput import ThroughputTracker
+from repro.queue import job as job_mod
 from repro.queue.job import Job, JobState
 from repro.queue.manager import QueueManager
 
@@ -80,13 +81,17 @@ class AdmissionController:
                  slo_delay_s: float = 1.0,
                  defer_factor: float = 4.0,
                  min_capacity: float = 1e-6,
-                 registry=None, telemetry=None):
+                 registry=None, telemetry=None, clock=None):
         self.queue = queue
         self.tracker = tracker
         self.ledger = ledger
         self.slo_delay_s = slo_delay_s
         self.defer_factor = defer_factor
         self.min_capacity = min_capacity
+        # injectable job-clock (tests/clock.py); default follows
+        # repro.queue.job.now at call time so a monkeypatched job clock
+        # and the deadline gate can never disagree on "now"
+        self._clock = clock
         # duck-typed TenantRegistry (repro.tenancy.spec); None → tenant-
         # blind legacy gate. Kept untyped so repro.queue never imports
         # repro.tenancy at module scope (tenancy builds on queue).
@@ -104,6 +109,10 @@ class AdmissionController:
         self.admitted = 0
         self.deferred = 0
         self.rejected = 0
+        # rejects whose cause was an unmeetable deadline (dead-on-arrival
+        # shedding — serving them would burn capacity on a guaranteed
+        # deadline miss); subset of ``rejected``
+        self.deadline_rejects = 0
         self.per_tenant: Dict[str, Dict[str, int]] = {}
         # metrics: admission.decisions{decision,tenant} counters plus a
         # projected-delay histogram (the gate's own view of backlog)
@@ -126,6 +135,10 @@ class AdmissionController:
             h = self._tel["delay"] = self.telemetry.registry.histogram(
                 "admission.projected_delay_s")
         h.observe(delay)
+
+    def now(self) -> float:
+        """Job-domain clock (see ``clock=``)."""
+        return self._clock() if self._clock is not None else job_mod.now()
 
     # -- topology events (ElasticController / scheduler failures) ------
     def on_group_join(self, name: str, lam_seed: float = 1.0) -> None:
@@ -277,6 +290,11 @@ class AdmissionController:
             return self._admit_locked(job)
 
     def _admit_locked(self, job: Job) -> AdmissionDecision:
+        if job.deadline_s is not None:
+            # deadline stamping: the absolute deadline rides the job's
+            # metadata into the journal, so a recovered daemon enforces
+            # the original budget, not one restarted at replay time
+            job.meta.setdefault("deadline_at", job.deadline_at)
         if self.registry is None:
             return self._gate(job, self.capacity_items_s(),
                               self.queue.backlog_items(),
@@ -288,6 +306,9 @@ class AdmissionController:
         if not self._tenant_quota_free(job):
             delay = (self._tenant_backlog_items(job.tenant) + job.items) \
                 / cap_t
+            infeasible = self._deadline_infeasible(job, delay, cap_t)
+            if infeasible is not None:
+                return infeasible
             at_quota = f"tenant {job.tenant} at in-flight quota " \
                        f"{spec.max_inflight}"
             # the reject band still applies at quota — otherwise a flood
@@ -328,12 +349,39 @@ class AdmissionController:
         return AdmissionDecision(Decision.REJECT, delay, cap,
                                  tenant=job.tenant, reason=reason)
 
+    def _deadline_infeasible(self, job: Job, delay: float,
+                             cap: float) -> Optional[AdmissionDecision]:
+        """REJECT a deadline job whose projected queue delay already
+        exceeds its remaining budget — admitting it could only produce a
+        deadline miss after burning real capacity. None when feasible
+        (or deadline-less)."""
+        if job.deadline_s is None:
+            return None
+        remaining = job.deadline_at - self.now()
+        if delay <= max(0.0, remaining):
+            return None
+        self.deadline_rejects += 1
+        if self.telemetry is not None:
+            self.telemetry.registry.counter(
+                "admission.deadline_rejects", tenant=job.tenant).add()
+            self.telemetry.tracer.instant(
+                "deadline_reject", tid="admission", tenant=job.tenant,
+                tier=job.tier, remaining_s=round(remaining, 6))
+        job.meta["deadline_missed"] = True
+        return self._reject(
+            job, delay, cap,
+            f"projected delay {delay:.3f}s exceeds remaining deadline "
+            f"budget {remaining:.3f}s")
+
     def _gate(self, job: Job, cap: float, backlog: int, slo: float,
               prefix: str) -> AdmissionDecision:
         """The three-band ADMIT/DEFER/REJECT ladder, shared by the legacy
         global gate and the per-tenant gate (which differ only in which
         capacity/backlog/SLO feed it)."""
         delay = (backlog + job.items) / cap
+        infeasible = self._deadline_infeasible(job, delay, cap)
+        if infeasible is not None:
+            return infeasible
         if delay <= slo:
             self.queue.put(job)
             self.admitted += 1

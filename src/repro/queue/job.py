@@ -22,6 +22,16 @@ from dataclasses import asdict, dataclass, field
 from enum import Enum
 from typing import Any, Dict, Optional
 
+from repro.core.types import TIERS, tier_rank
+
+
+def now() -> float:
+    """Wall-clock source for every job lifecycle stamp. Module-level so
+    the deterministic test harness (tests/clock.py) can substitute a
+    virtual clock (``repro.queue.job.now = vclock.now``) and make queue
+    delays / deadlines exact instead of sleep-raced."""
+    return time.time()
+
 
 class JobState(str, Enum):
     PENDING = "pending"        # submitted, awaiting admission decision
@@ -60,13 +70,22 @@ class Job:
     Lower ``priority`` is more urgent (heap order); ties break FIFO on the
     queue's admission sequence number, not on wall-clock, so two jobs
     admitted in the same clock tick still have a deterministic order.
+
+    ``tier`` is the latency class (core.types.TIERS): it orders the heap
+    *above* ``priority`` (any urgent job beats any standard job), selects
+    the express lane in the service, and sets the epoch priority its
+    batch runs at. ``deadline_s`` is a relative latency budget from
+    ``created_at``; a job past ``deadline_at`` is shed at admission or
+    pop, and an in-flight batch past it is cancelled cooperatively.
     """
     items: int = 1
     priority: int = 10
+    tier: str = "standard"
+    deadline_s: Optional[float] = None
     job_id: str = field(default_factory=lambda: uuid.uuid4().hex)
     tenant: str = "default"
     state: JobState = JobState.PENDING
-    created_at: float = field(default_factory=time.time)
+    created_at: float = field(default_factory=lambda: now())
     admitted_at: Optional[float] = None
     started_at: Optional[float] = None        # latest dispatch
     first_started_at: Optional[float] = None  # first dispatch (SLO metric)
@@ -86,24 +105,39 @@ class Job:
         if isinstance(self.state, str) and not isinstance(self.state,
                                                           JobState):
             self.state = JobState(self.state)
+        tier_rank(self.tier)    # unknown tier names fail at submission
+        if self.deadline_s is not None and self.deadline_s <= 0:
+            raise ValueError(f"job {self.job_id}: deadline_s must be > 0")
 
     # -- lifecycle -----------------------------------------------------
     def transition(self, new: JobState) -> "Job":
         if new not in TRANSITIONS[self.state]:
             raise IllegalTransition(
                 f"job {self.job_id}: {self.state.value} -> {new.value}")
-        now = time.time()
+        t = now()
         if new == JobState.ADMITTED:
-            self.admitted_at = now
+            self.admitted_at = t
         elif new == JobState.RUNNING:
-            self.started_at = now
+            self.started_at = t
             if self.first_started_at is None:
-                self.first_started_at = now
+                self.first_started_at = t
             self.attempts += 1
         elif new in TERMINAL or new == JobState.REQUEUED:
-            self.finished_at = now
+            self.finished_at = t
         self.state = new
         return self
+
+    @property
+    def rank(self) -> int:
+        """Tier comparison key (lower = more urgent)."""
+        return tier_rank(self.tier)
+
+    @property
+    def deadline_at(self) -> Optional[float]:
+        """Absolute deadline on the job clock, or None (no deadline)."""
+        if self.deadline_s is None:
+            return None
+        return self.created_at + self.deadline_s
 
     @property
     def terminal(self) -> bool:
@@ -132,6 +166,8 @@ class Job:
     def from_dict(cls, d: Dict[str, Any]) -> "Job":
         job = cls(items=int(d.get("items", 1)),
                   priority=int(d.get("priority", 10)),
+                  tier=d.get("tier", "standard"),
+                  deadline_s=d.get("deadline_s"),
                   job_id=d.get("job_id", uuid.uuid4().hex),
                   tenant=d.get("tenant", "default"),
                   state=JobState(d.get("state", "pending")),

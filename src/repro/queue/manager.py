@@ -1,11 +1,16 @@
 """Thread-safe priority queue over Jobs, feeding the dynamic scheduler.
 
-Heap entries are ``(priority, seq, job_id)`` — ``seq`` is a monotonically
-increasing admission counter so equal priorities drain FIFO and a requeued
-job re-enters *behind* equal-priority work admitted while it was running
-(no starvation of fresh traffic by a crash-looping job). Cancellation is
-lazy: the entry stays in the heap and is skipped at pop() when its job is
-no longer ADMITTED, which keeps cancel() O(1).
+Heap entries are ``(tier rank, priority, seq, job_id)`` — the latency
+tier dominates (any urgent job drains before any standard job, which
+drains before any batch job), ``priority`` orders within a tier, and
+``seq`` is a monotonically increasing admission counter so equal
+priorities drain FIFO and a requeued job re-enters *behind* equal-rank
+work admitted while it was running (no starvation of fresh traffic by a
+crash-looping job). Cancellation is lazy: the entry stays in the heap and
+is skipped at pop() when its job is no longer ADMITTED, which keeps
+cancel() O(1). ``pop_express`` pops *only* urgent-tier heads — the
+service's express lane, which must never accidentally drag standard work
+past the pipeline-depth gate.
 
 Per-group in-flight tracking (``mark_running`` / ``mark_finished``) gives
 the admission controller and the watchdog a live view of which groups hold
@@ -24,7 +29,11 @@ import threading
 import time
 from typing import Dict, List, Optional, Set, Tuple
 
+from repro.core.types import TIER_RANK
 from repro.queue.job import Job, JobState
+
+#: tier ranks at or below this drain through the express lane
+EXPRESS_RANK = TIER_RANK["urgent"]
 
 
 def drain_with_deadline(cond: threading.Condition, pop_many_locked,
@@ -49,7 +58,7 @@ def drain_with_deadline(cond: threading.Condition, pop_many_locked,
 
 class QueueManager:
     def __init__(self):
-        self._heap: List[Tuple[int, int, str]] = []
+        self._heap: List[Tuple[int, int, int, str]] = []
         self._jobs: Dict[str, Job] = {}
         self._inflight: Dict[str, Set[str]] = {}     # group -> job ids
         self._terminal_counts: Dict[str, int] = {}   # evicted-job history
@@ -74,8 +83,8 @@ class QueueManager:
                     f"cannot enqueue job {job.job_id} in state "
                     f"{job.state.value}")
             self._jobs[job.job_id] = job
-            heapq.heappush(self._heap, (job.priority, next(self._seq),
-                                        job.job_id))
+            heapq.heappush(self._heap, (job.rank, job.priority,
+                                        next(self._seq), job.job_id))
             self._not_empty.notify()
 
     def cancel(self, job_id: str) -> bool:
@@ -127,21 +136,58 @@ class QueueManager:
             jobs.append(job)
         return jobs
 
-    def _pop_admitted_locked(self) -> Optional[Job]:
+    def _pop_admitted_locked(self, max_rank: Optional[int] = None) \
+            -> Optional[Job]:
+        """Pop the best ADMITTED job; with ``max_rank``, only if its tier
+        rank is at most that (the heap is rank-first, so a too-lazy head
+        means no eligible job exists — nothing is popped)."""
         while self._heap:
-            _, _, job_id = heapq.heappop(self._heap)
+            rank, _, _, job_id = self._heap[0]
             job = self._jobs.get(job_id)
-            if job is not None and job.state == JobState.ADMITTED:
-                return job
+            if job is None or job.state != JobState.ADMITTED:
+                heapq.heappop(self._heap)       # stale entry
+                continue
+            if max_rank is not None and rank > max_rank:
+                return None
+            heapq.heappop(self._heap)
+            return job
         return None
 
+    def pop_express(self, max_n: int) -> List[Job]:
+        """Up to ``max_n`` *urgent-tier* ADMITTED jobs, non-blocking —
+        the service's express lane drain. Jobs stay ADMITTED (two-phase
+        pop, see ``pop``)."""
+        with self._lock:
+            jobs: List[Job] = []
+            while len(jobs) < max_n:
+                job = self._pop_admitted_locked(max_rank=EXPRESS_RANK)
+                if job is None:
+                    break
+                jobs.append(job)
+            return jobs
+
+    def express_backlog(self) -> int:
+        """Urgent-tier jobs an express pop could take *now* — scanned
+        from the heap, not the job map, because two-phase pop leaves
+        already-popped jobs ADMITTED (they are the service's to run, not
+        the express lane's)."""
+        with self._lock:
+            seen = set()
+            for rank, _, _, job_id in self._heap:
+                if rank > EXPRESS_RANK or job_id in seen:
+                    continue
+                job = self._jobs.get(job_id)
+                if job is not None and job.state == JobState.ADMITTED:
+                    seen.add(job_id)
+            return len(seen)
+
     def peek(self) -> Optional[Job]:
-        """Highest-priority ADMITTED job without removing it (stale heap
-        entries for cancelled/evicted jobs are dropped on the way) — the
-        DWRR drain needs the head job's cost before deciding to serve it."""
+        """Best ADMITTED job without removing it (stale heap entries for
+        cancelled/evicted jobs are dropped on the way) — the DWRR drain
+        needs the head job's cost before deciding to serve it."""
         with self._lock:
             while self._heap:
-                _, _, job_id = self._heap[0]
+                _, _, _, job_id = self._heap[0]
                 job = self._jobs.get(job_id)
                 if job is not None and job.state == JobState.ADMITTED:
                     return job

@@ -42,10 +42,11 @@ from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 from repro import telemetry as telemetry_mod
 from repro.core.scheduler import DynamicScheduler, EpochHandle, \
     ScheduleResult
-from repro.core.types import IterationSpace
+from repro.core.types import IterationSpace, TIERS
+from repro.queue import job as job_mod
+from repro.queue.job import IllegalTransition, Job, JobState
 from repro.queue.admission import AdmissionController, AdmissionDecision, \
     Decision
-from repro.queue.job import IllegalTransition, Job, JobState
 from repro.queue.journal import JournalStore
 from repro.queue.manager import QueueManager
 
@@ -101,6 +102,11 @@ class ServiceStats:
     # batches submitted before the previous batch finished — the
     # double-buffered drain working (counted incrementally)
     overlapped: int = 0
+    # latency-tier bookkeeping: per-tier deadline misses (shed at pop or
+    # cancelled in flight), express-lane batches, cancelled batches
+    deadline_misses: Dict[str, int] = field(default_factory=dict)
+    express_batches: int = 0
+    cancelled_batches: int = 0
     # (submitted_at, finished_at) monotonic stamps of recent batches;
     # capped so a long-lived daemon's memory stays bounded
     batch_windows: List[Tuple[float, float]] = field(default_factory=list)
@@ -127,6 +133,11 @@ class _InflightBatch:
     submitted_at: float
     handle: Optional[EpochHandle] = None
     error: Optional[BaseException] = None
+    tier: str = "standard"
+    # earliest member deadline on the *service* monotonic clock (the job
+    # clock and scheduler clock are different domains; bridged at submit)
+    deadline_mono: Optional[float] = None
+    express: bool = False
 
 
 class JobService:
@@ -140,8 +151,18 @@ class JobService:
                  pipeline_depth: int = 2, persistent: bool = True,
                  straggler: Optional["StragglerDetector"] = None,
                  accountant=None, max_deferred: int = 10_000,
-                 telemetry=None):
+                 telemetry=None, express: bool = True,
+                 express_slots: int = 1, clock=None, sleep=None):
         self.make_scheduler = make_scheduler
+        # monotonic clock / sleep seams for the deterministic test
+        # harness; the ctor arg shadows the module global, hence the
+        # globals() reach-around for the default
+        self.clock = clock if clock is not None else globals()["clock"]
+        self._sleep = sleep if sleep is not None else time.sleep
+        # express lane: urgent-tier jobs bypass the pipeline-depth gate
+        # (up to express_slots extra batches in flight beyond depth)
+        self.express = express
+        self.express_slots = max(1, express_slots)
         self.queue = queue or QueueManager()
         self.admission = admission
         self.journal = journal
@@ -352,14 +373,40 @@ class JobService:
             jobs.append(nxt)
         return jobs
 
-    def _submit_batch(self, jobs: List[Job]) -> Optional[BatchReport]:
+    def _record_deadline_miss(self, job: Job, where: str) -> None:
+        """Per-tier deadline-miss bookkeeping (stats + telemetry +
+        journal). ``where`` is the enforcement point: "pop" (expired
+        before dispatch) or "cancel" (in-flight epoch cancelled)."""
+        job.meta["deadline_missed"] = True
+        self.stats.deadline_misses[job.tier] = \
+            self.stats.deadline_misses.get(job.tier, 0) + 1
+        if self.telemetry is not None:
+            self._counter("svc.deadline_misses", tier=job.tier).add(1)
+            self.telemetry.tracer.instant(
+                "deadline_miss", tid="service", job=job.job_id,
+                tier=job.tier, where=where)
+        self._journal(job, "deadline-miss")
+
+    def _submit_batch(self, jobs: List[Job],
+                      express: bool = False) -> Optional[BatchReport]:
         """Mark a batch RUNNING and submit its epoch. On submit failure the
         batch is finalized immediately (returns its report); otherwise it
         joins the in-flight pipeline and None is returned. Jobs cancelled
         in the pop-to-dispatch window (two-phase pop leaves them ADMITTED
-        and cancellable) are dropped here, not crashed on."""
+        and cancellable) are dropped here, not crashed on; jobs already
+        past their deadline are shed here (CANCELLED, counted as misses)
+        rather than burning device time on work nobody can use."""
         live = []
+        jnow = job_mod.now()
         for j in jobs:
+            if j.deadline_at is not None and jnow > j.deadline_at:
+                try:                        # expired while queued
+                    self.queue.mark_finished(j, JobState.CANCELLED)
+                except IllegalTransition:
+                    pass                    # already terminal elsewhere
+                else:
+                    self._record_deadline_miss(j, where="pop")
+                continue
             try:
                 self.queue.mark_running(j)
             except IllegalTransition:       # cancelled while popped
@@ -371,12 +418,28 @@ class JobService:
             return None
         jobs = live
         total = sum(j.items for j in jobs)
-        ib = _InflightBatch(jobs=jobs, total=total, submitted_at=clock())
+        # the batch runs at the tier of its most urgent member, and its
+        # epoch inherits the earliest member deadline, bridged from the
+        # job (wall) clock to the scheduler (monotonic) clock
+        tier = TIERS[min(j.rank for j in jobs)]
+        deadlines = [j.deadline_at for j in jobs
+                     if j.deadline_at is not None]
+        deadline_mono = self.clock() + (min(deadlines) - jnow) \
+            if deadlines else None
+        ib = _InflightBatch(jobs=jobs, total=total,
+                            submitted_at=self.clock(), tier=tier,
+                            deadline_mono=deadline_mono, express=express)
+        if express:
+            self.stats.express_batches += 1
+            if self.telemetry is not None:
+                self._counter("svc.express_batches").add(1)
         if not self.persistent:
             return self._run_batch_sync(ib)
         try:
             sched = self._scheduler()
-            ib.handle = sched.submit_epoch(IterationSpace(0, total))
+            ib.handle = sched.submit_epoch(IterationSpace(0, total),
+                                           priority=tier,
+                                           deadline_s=deadline_mono)
             if self.telemetry is not None:
                 # register the batch's tenant composition against the
                 # epoch index BEFORE any chunk completes, so chunk spans
@@ -387,7 +450,7 @@ class JobService:
                     tenants[j.tenant] = tenants.get(j.tenant, 0) + j.items
                 self.telemetry.tracer.tag_epoch(
                     ib.handle.index, {"tenants": tenants,
-                                      "jobs": len(jobs)})
+                                      "jobs": len(jobs), "tier": tier})
         except Exception as e:          # broken factory / submit: fail the
             ib.error = e                # batch, not the daemon
             logger.exception("batch of %d jobs failed to submit", len(jobs))
@@ -433,20 +496,29 @@ class JobService:
         # the space), so a partial count cannot be attributed to specific
         # jobs — never mark a job DONE whose items may not have run
         done = completed >= ib.total
+        cancelled = res is not None and res.cancelled
+        if cancelled:
+            self.stats.cancelled_batches += 1
 
         # per-tenant attribution + soft energy-budget weight derating
         # (before job finalization so the very next DWRR pop sees it).
         # Completed batches only: a failed batch's jobs requeue and run
         # again in full, so attributing the failed attempt too would
-        # double-count the tenant's items and inflate its fairness share
-        if self.accountant is not None and res is not None and done:
-            self.accountant.record_batch(ib.jobs, res,
-                                         window=(ib.submitted_at, clock()))
+        # double-count the tenant's items and inflate its fairness share.
+        # A *cancelled* batch DID consume device time and joules that no
+        # retry gives back, so those are charged — but without the item
+        # counts, which the eventual completing attempt will charge
+        if self.accountant is not None and res is not None \
+                and (done or cancelled):
+            self.accountant.record_batch(
+                ib.jobs, res, window=(ib.submitted_at, self.clock()),
+                count_items=done)
             derates = self.accountant.derate_weights()
             set_derates = getattr(self.queue, "set_weight_derates", None)
             if set_derates is not None:
                 set_derates(derates)
         tel = self.telemetry
+        jnow = job_mod.now()
         for j in ib.jobs:
             if done:
                 self.queue.mark_finished(j, JobState.DONE)
@@ -460,7 +532,16 @@ class JobService:
                         self._histogram("queue.queue_delay_s",
                                         tenant=j.tenant) \
                             .observe(j.queue_delay)
+                        self._histogram("svc.latency_s", tier=j.tier) \
+                            .observe(max(0.0, jnow - j.created_at))
                 state = "done"
+            elif cancelled and j.deadline_at is not None \
+                    and jnow >= j.deadline_at:
+                # the epoch was cancelled and this job's own budget is
+                # spent: retrying cannot meet it — shed, not requeue
+                self.queue.mark_finished(j, JobState.CANCELLED)
+                self._record_deadline_miss(j, where="cancel")
+                state = "cancelled"
             elif j.attempts_left > 0:
                 self.queue.mark_finished(j, JobState.REQUEUED)
                 self.queue.requeue(j)
@@ -475,33 +556,81 @@ class JobService:
                     .add(1)
             self._journal(j)
         self.stats.batches += 1
-        finished = clock()
+        finished = self.clock()
         self.stats.record_window(ib.submitted_at, finished)
         if tel is not None:
             self._counter("svc.batches").add(1)
             self._counter("svc.batch_items").add(min(completed, ib.total))
             tel.tracer.span(f"batch:{self.stats.batches}", tid="service",
                             start=ib.submitted_at, end=finished,
-                            jobs=len(ib.jobs), items=ib.total, done=done)
+                            jobs=len(ib.jobs), items=ib.total, done=done,
+                            tier=ib.tier, cancelled=cancelled)
         return BatchReport(ib.jobs, min(completed, ib.total), ib.total,
                            list(failed_groups), res,
                            submitted_at=ib.submitted_at,
                            finished_at=finished)
 
+    def _pump_express(self) -> bool:
+        """Express lane: drain urgent-tier jobs PAST the pipeline-depth
+        gate (up to ``express_slots`` extra batches in flight). The
+        urgent epoch preempts queued standard work inside the scheduler,
+        so a cold-arriving urgent job is served within one batch boundary
+        instead of waiting out the full double-buffered pipeline."""
+        if not self.express or not self.persistent:
+            return False
+        pop_express = getattr(self.queue, "pop_express", None)
+        if pop_express is None:
+            return False
+        progressed = False
+        while sum(1 for ib in self._inflight if ib.express) \
+                < self.express_slots:
+            jobs = pop_express(self.batch_jobs)
+            if not jobs:
+                break
+            self._submit_batch(jobs, express=True)
+            progressed = True
+        return progressed
+
+    def _enforce_deadlines(self) -> None:
+        """Cooperatively cancel in-flight epochs whose batch deadline has
+        passed — workers wind down at the next chunk boundary and the
+        unfinished tail requeues via finalization."""
+        if self._sched is None:
+            return
+        now = self.clock()
+        for ib in self._inflight:
+            if ib.deadline_mono is None or now <= ib.deadline_mono:
+                continue
+            if isinstance(ib.handle, EpochHandle) and not ib.handle.done():
+                self._sched.cancel_epoch(ib.handle, reason="deadline")
+
     def _pump(self, block_s: float = 0.0) -> bool:
         """One pipeline step: keep up to ``pipeline_depth`` batches in
-        flight, finalize completed ones in submission order. Returns
-        whether any batch was submitted or finalized."""
-        progressed = False
-        while len(self._inflight) < self.pipeline_depth:
+        flight (plus the express lane), enforce batch deadlines, finalize
+        completed ones. Returns whether any batch was submitted or
+        finalized. Express batches finalize out of order (they finish
+        early by design — never leave one blocked behind a long batch
+        epoch at the pipeline head)."""
+        progressed = self._pump_express()
+        self._enforce_deadlines()
+        while sum(1 for ib in self._inflight if not ib.express) \
+                < self.pipeline_depth:
             jobs = self._pop_batch(0.0 if (self._inflight or progressed)
                                    else block_s)
             if not jobs:
                 break
             rep = self._submit_batch(jobs)
             progressed = True
+            self._pump_express()            # urgent work that arrived
+            self._enforce_deadlines()       # while we blocked in pop
             if rep is not None:             # sync mode / submit failure
                 break
+        for ib in list(self._inflight):     # out-of-order completions
+            if ib is not self._inflight[0] and ib.handle is not None \
+                    and ib.handle.done():
+                self._inflight.remove(ib)
+                self._finalize_batch(ib)
+                progressed = True
         while self._inflight:
             # block only when no new batch can be submitted anyway (full
             # pipeline, or an idle pass) — otherwise just poll
@@ -536,8 +665,8 @@ class JobService:
     def run_until_idle(self, timeout_s: float = 60.0) -> bool:
         """Drain (pipelined) until queue + deferred + in-flight are empty;
         False on timeout."""
-        deadline = time.monotonic() + timeout_s
-        while time.monotonic() < deadline:
+        deadline = self.clock() + timeout_s
+        while self.clock() < deadline:
             self.retry_deferred()
             self._poll_health()
             progressed = self._pump(block_s=self.poll_s)
@@ -547,7 +676,7 @@ class JobService:
                 idle = not self._deferred
             if idle and self.queue.depth() == 0:
                 return True
-            time.sleep(self.poll_s)
+            self._sleep(self.poll_s)
         return False
 
     # -- daemon mode ---------------------------------------------------
@@ -583,7 +712,7 @@ class JobService:
             self.retry_deferred()
             self._poll_health()
             if not self._pump(block_s=self.poll_s) and not self._inflight:
-                time.sleep(self.poll_s)
+                self._sleep(self.poll_s)
 
 
 class _DoneHandle:

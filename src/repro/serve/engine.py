@@ -61,6 +61,11 @@ class QueueServeReport:
     per_tenant: Dict[str, Dict] = field(default_factory=dict)
     admission_per_tenant: Dict[str, Dict[str, int]] = \
         field(default_factory=dict)
+    # latency tiers: per-tier deadline misses, express-lane batches, and
+    # in-flight epochs cancelled (deadline preemption)
+    deadline_misses: Dict[str, int] = field(default_factory=dict)
+    express_batches: int = 0
+    cancelled_batches: int = 0
 
 
 class HeteroServeEngine:
@@ -226,7 +231,8 @@ class HeteroServeEngine:
                    pipeline_depth: int = 2,
                    persistent: bool = True,
                    tenants: Optional[TenantRegistry] = None,
-                   energy_model: Optional[EnergyModel] = None) \
+                   energy_model: Optional[EnergyModel] = None,
+                   express: bool = True) \
             -> QueueServeReport:
         """Serve prioritized jobs through admission control + queue.
 
@@ -249,6 +255,12 @@ class HeteroServeEngine:
         per-tenant accounting; with an ``energy_model`` each tenant's
         attributed joules/EDP are reported and soft energy budgets derate
         DWRR weights. Without a registry nothing changes.
+
+        Latency tiers: urgent jobs drain through the service's express
+        lane (``express=False`` disables it, the benchmark baseline),
+        batches run at the tier of their most urgent member, and jobs
+        with ``deadline_s`` are shed at pop or cooperatively cancelled in
+        flight once the budget is spent.
         """
         tracker = ThroughputTracker(self.alpha)
         ledger = OverheadLedger()
@@ -292,7 +304,8 @@ class HeteroServeEngine:
                              pipeline_depth=pipeline_depth,
                              persistent=persistent,
                              accountant=accountant,
-                             telemetry=self._tel_arg())
+                             telemetry=self._tel_arg(),
+                             express=express)
         t0 = time.monotonic()
         for job in jobs:
             service.submit(job)
@@ -314,4 +327,7 @@ class HeteroServeEngine:
             drained=drained,
             per_tenant=accountant.snapshot() if accountant else {},
             admission_per_tenant=dict(admission.per_tenant)
-            if admission is not None else {})
+            if admission is not None else {},
+            deadline_misses=dict(st.deadline_misses),
+            express_batches=st.express_batches,
+            cancelled_batches=st.cancelled_batches)

@@ -92,7 +92,8 @@ class TenantAccountant:
     # -- attribution ----------------------------------------------------
     def record_batch(self, jobs: Iterable["Job"],
                      result: Optional["ScheduleResult"],
-                     window: Optional[tuple] = None) -> Dict[str, float]:
+                     window: Optional[tuple] = None,
+                     count_items: bool = True) -> Dict[str, float]:
         """Attribute one finalized batch to its tenants by item share.
 
         ``window`` is the batch's monotonic ``(submitted_at, finished_at)``
@@ -103,6 +104,12 @@ class TenantAccountant:
         ``meta["tenant_shares"]`` so downstream consumers of the record
         stream (ledgers, traces) can re-split per-chunk numbers without
         re-deriving batch composition.
+
+        ``count_items=False`` charges busy time / wall / joules but NOT
+        item counts: a *cancelled* (deadline-preempted) batch consumed
+        real device time that no retry gives back, yet its unfinished
+        jobs requeue and the completing attempt will charge the items —
+        charging them here too would double-count the tenant's share.
         """
         items: Dict[str, int] = {}
         for j in jobs:
@@ -128,7 +135,8 @@ class TenantAccountant:
                 self._window_end = max(self._window_end, end)
             for t, share in shares.items():
                 u = self._usage.setdefault(t, TenantUsage())
-                u.items += items[t]
+                if count_items:
+                    u.items += items[t]
                 u.busy_s += share * busy_total
                 u.wall_s += share * wall
                 u.energy_j += share * energy_total

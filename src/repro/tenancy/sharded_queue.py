@@ -212,6 +212,48 @@ class ShardedQueueManager:
             jobs.append(job)
         return jobs
 
+    def pop_express(self, max_n: int) -> List[Job]:
+        """Express-lane drain: up to ``max_n`` *urgent-tier* jobs,
+        non-blocking, round-robin across shards so one tenant's urgent
+        burst cannot monopolize the lane. Quota still binds (urgency does
+        not override isolation), and each popped job's items are charged
+        to the tenant's DWRR deficit — allowed to go negative, i.e. the
+        tenant *borrows* against its future turns and pays the express
+        service back in the regular rotation, so long-run fairness shares
+        are preserved."""
+        with self._lock:
+            jobs: List[Job] = []
+            if not self._order:
+                return jobs
+            start = self._cursor % len(self._order)
+            idle_scans = 0
+            i = start
+            while len(jobs) < max_n and idle_scans < len(self._order):
+                tenant = self._order[i % len(self._order)]
+                i += 1
+                job = None
+                if self._under_quota(tenant):
+                    job = self._shards[tenant].pop_express(1)
+                    job = job[0] if job else None
+                if job is None:
+                    idle_scans += 1
+                    continue
+                idle_scans = 0
+                self._deficit[tenant] -= job.items      # borrow
+                self._popped[tenant].add(job.job_id)
+                jobs.append(job)
+                if self.telemetry is not None:
+                    self._tel_pop(tenant, job.items)
+                    self.telemetry.registry.counter(
+                        "queue.express_pops", tenant=tenant).add()
+            return jobs
+
+    def express_backlog(self) -> int:
+        """Queued urgent-tier jobs across all shards (quota-capped shards
+        included — their urgency surfaces once a slot frees)."""
+        with self._lock:
+            return sum(s.express_backlog() for s in self._shards.values())
+
     def _burst_cap(self, tenant: str) -> float:
         spec = self._spec(tenant)
         return getattr(spec, "burst_quantum", 0.0) or 0.0 \

@@ -1,0 +1,78 @@
+"""Deterministic virtual clock for timing-sensitive tests.
+
+Real ``time.sleep`` in tests buys flakiness: an assertion like "the
+urgent job was served within 0.2 s" races the host's load. VirtualClock
+replaces both the clock *and* the sleep with a shared virtual timeline:
+
+- ``now()`` returns virtual seconds (starts at 0.0).
+- ``sleep(dt)`` registers the caller as a sleeper and blocks until the
+  virtual time reaches ``now() + dt``. Crucially, a sleeper *advances*
+  the clock itself when it holds the **earliest** pending wake-up — so a
+  set of threads that are all sleeping make progress deterministically,
+  in wake-up order, with no wall-clock dependence.
+- ``advance(dt)`` force-advances the timeline (for drivers that never
+  sleep themselves).
+
+Every component in the runtime takes a clock/sleep seam
+(``DynamicScheduler(clock=...)``, ``SleepExecutor(clock=..., sleep=...)``,
+``JobService(clock=..., sleep=...)``, ``repro.queue.job.now``), so a test
+can pin the whole stack to one virtual timeline and assert *exact*
+timestamps.
+
+The ``cond.wait(0.05)`` in the sleeper loop is a liveness backstop, not a
+timing dependence: when some thread is busy between sleeps (e.g. holding
+the minimum wake but still executing), the other sleepers re-check
+periodically instead of deadlocking on a missed notify.
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+from typing import Dict
+
+
+class VirtualClock:
+    def __init__(self, start: float = 0.0):
+        self._t = float(start)
+        self._cond = threading.Condition()
+        self._sleepers: Dict[int, float] = {}
+        self._ids = itertools.count()
+
+    def now(self) -> float:
+        with self._cond:
+            return self._t
+
+    def advance(self, dt: float) -> float:
+        """Force the timeline forward by ``dt`` virtual seconds."""
+        with self._cond:
+            self._t += float(dt)
+            self._cond.notify_all()
+            return self._t
+
+    def sleep(self, dt: float) -> None:
+        if dt <= 0:
+            return
+        with self._cond:
+            sid = next(self._ids)
+            wake = self._t + float(dt)
+            self._sleepers[sid] = wake
+            self._cond.notify_all()
+            try:
+                while self._t < wake:
+                    # advance time ourselves only while we hold the
+                    # earliest pending wake-up — later sleepers must not
+                    # leapfrog an earlier one
+                    if wake <= min(self._sleepers.values()):
+                        self._t = wake
+                        self._cond.notify_all()
+                        break
+                    self._cond.wait(0.05)
+            finally:
+                del self._sleepers[sid]
+                self._cond.notify_all()
+
+    def sleeping(self) -> int:
+        """Number of threads currently blocked in ``sleep`` (test
+        introspection)."""
+        with self._cond:
+            return len(self._sleepers)

@@ -1,7 +1,24 @@
 import os
 import sys
 
+import pytest
+
 # NOTE: never set XLA_FLAGS / host device count here — smoke tests and
 # benches must see the single real CPU device (the 512-device trick is
 # exclusively the dry-run launcher's, set before any jax import there).
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))
+
+from clock import VirtualClock  # noqa: E402
+
+
+@pytest.fixture
+def vclock(monkeypatch):
+    """One virtual timeline for the whole stack: the job lifecycle clock
+    is monkeypatched module-wide; scheduler / executor / service clocks
+    are seams the test wires explicitly (``clock=vc.now``,
+    ``sleep=vc.sleep``)."""
+    vc = VirtualClock()
+    import repro.queue.job as job_mod
+    monkeypatch.setattr(job_mod, "now", vc.now)
+    return vc

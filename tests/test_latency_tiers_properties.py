@@ -1,0 +1,76 @@
+"""Hypothesis property tests for the latency-tier subsystem: starvation
+freedom of the mixed-tier drain and item-count conservation across the
+cancel/reclaim path. Skipped wholesale when hypothesis is absent (the
+deterministic sweeps in tests/test_latency_tiers.py still run)."""
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import DeviceKind, GroupSpec
+from repro.core.partitioner import HeterogeneousPartitioner
+from repro.core.throughput import ThroughputTracker
+from repro.core.types import TIERS, IterationSpace
+from repro.queue import Job, QueueManager
+
+
+@settings(max_examples=30, deadline=None)
+@given(tiers=st.lists(st.sampled_from(TIERS), min_size=1, max_size=40),
+       express_every=st.integers(min_value=1, max_value=4))
+def test_property_no_starvation_mixed_tier_drain(tiers, express_every):
+    """Interleaving express pops with normal pops drains EVERY job
+    exactly once — urgent load cannot starve batch work out of the
+    queue, and the express lane never takes non-urgent jobs."""
+    q = QueueManager()
+    jobs = [Job(tier=t, priority=i) for i, t in enumerate(tiers)]
+    for j in jobs:
+        q.put(j)
+    popped, express_popped = [], []
+    rounds = 0
+    while True:
+        rounds += 1
+        assert rounds <= 3 * len(jobs) + 3, "drain did not terminate"
+        if rounds % express_every == 0:
+            got = q.pop_express(1)
+            express_popped.extend(got)
+            popped.extend(got)
+            if got:
+                continue
+        j = q.pop()
+        if j is None:
+            break
+        popped.append(j)
+    assert sorted(j.job_id for j in popped) == \
+        sorted(j.job_id for j in jobs)
+    assert all(j.tier == "urgent" for j in express_popped)
+
+
+@settings(max_examples=30, deadline=None)
+@given(total=st.integers(min_value=1, max_value=5000),
+       takes=st.integers(min_value=0, max_value=40),
+       min_chunk=st.integers(min_value=1, max_value=4))
+def test_property_reclaim_conserves_item_count(total, takes, min_chunk):
+    """Partitioner take/steal then reclaim (the cancellation path): every
+    item is either in a taken chunk or back in the space — none lost,
+    none duplicated — and reclaim is idempotent."""
+    specs = {
+        "a": GroupSpec("a", DeviceKind.BIG, init_throughput=1000.0,
+                       min_chunk=min_chunk),
+        "b": GroupSpec("b", DeviceKind.BIG, init_throughput=250.0,
+                       min_chunk=1),
+    }
+    space = IterationSpace(0, total)
+    part = HeterogeneousPartitioner(space, specs, ThroughputTracker(0.5),
+                                    base_quantum=64, chunk_mode="range")
+    part.begin_epoch(space)
+    taken = 0
+    names = ["a", "b"]
+    for i in range(takes):
+        tok = part.next_token(names[i % 2], space)
+        if tok is None:
+            break
+        taken += tok.chunk.size
+    assert part.reclaim_space(space) >= 0
+    assert taken + space.remaining == total
+    assert part.reclaim_space(space) == 0
+    assert taken + space.remaining == total

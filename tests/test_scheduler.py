@@ -48,18 +48,45 @@ def test_failed_group_work_is_absorbed():
         + res.per_group_items.get("cpu1", 0) == res.iterations
 
 
-def test_elastic_join_mid_run():
+def test_elastic_join_mid_run(vclock):
+    # deterministically mid-run: the first chunk gates the run until the
+    # join has landed (no racing a real 50 ms sleep against the epoch)
+    import threading
+    started, gate = threading.Event(), threading.Event()
+    late_got_chunk = threading.Event()
+
+    class GateExecutor(SleepExecutor):
+        def execute(self, token, rec):
+            out = super().execute(token, rec)
+            started.set()
+            if not gate.is_set():
+                assert gate.wait(10.0)
+            return out
+
+    class LateExecutor(SleepExecutor):
+        def execute(self, token, rec):
+            late_got_chunk.set()
+            return super().execute(token, rec)
+
     s = DynamicScheduler(
         {"accel": GroupSpec("accel", DeviceKind.ACCEL, fixed_chunk=100,
                             init_throughput=50_000)},
-        {"accel": SleepExecutor(rate=50_000)})
+        {"accel": GateExecutor(rate=50_000, clock=vclock.now,
+                               sleep=vclock.sleep)},
+        clock=vclock.now)
     ctl = ElasticController(s)
-    import threading
 
     def join_later():
-        time.sleep(0.05)
-        ctl.join("late", DeviceKind.BIG, SleepExecutor(rate=50_000),
+        assert started.wait(10.0)
+        ctl.join("late", DeviceKind.BIG,
+                 LateExecutor(rate=50_000, clock=vclock.now,
+                              sleep=vclock.sleep),
                  min_chunk=4)
+        # hold accel at the gate until the joined group has provably
+        # taken a chunk — accel otherwise drains the whole space in the
+        # real microseconds the new dispatcher thread needs to spawn
+        assert late_got_chunk.wait(10.0)
+        gate.set()
 
     th = threading.Thread(target=join_later)
     th.start()
@@ -203,17 +230,34 @@ def test_epoch_window_stays_bounded():
         s.shutdown()
 
 
-def test_late_failure_requeue_is_absorbed_after_others_left():
+def test_late_failure_requeue_is_absorbed_after_others_left(vclock):
     """A group that fails after every other dispatcher already left the
     epoch requeues its chunk into the epoch's space; a live dispatcher
     must scan back and drain it (work conservation), not let the epoch
     finalize short."""
     from repro.core.dispatch import ChunkExecutor, ChunkFailure
 
+    import threading
+    doomed_started = threading.Event()
+
     class LateFailExecutor(ChunkExecutor):
+        # 0.25 *virtual* seconds: the fast group's entire space is 0.004
+        # virtual seconds of work, so once both sleepers are registered
+        # the fast group is guaranteed (not raced) to exhaust the space
+        # and leave before this failure lands
         def execute(self, token, rec):
-            time.sleep(0.25)        # the fast group exhausts the space
+            doomed_started.set()
+            vclock.sleep(0.25)
             raise ChunkFailure(f"group {token.group} died late")
+
+    class GatedFastExecutor(SleepExecutor):
+        # fast must not drain the space before doomed has even taken a
+        # chunk — under the virtual clock fast's sleeps self-advance
+        # instantly, so without this gate doomed can lose the startup
+        # race and never execute at all
+        def execute(self, token, rec):
+            assert doomed_started.wait(10.0)
+            return super().execute(token, rec)
 
     groups = {
         "fast": GroupSpec("fast", DeviceKind.BIG, init_throughput=1e6,
@@ -221,8 +265,10 @@ def test_late_failure_requeue_is_absorbed_after_others_left():
         "doomed": GroupSpec("doomed", DeviceKind.BIG, init_throughput=1e6,
                             min_chunk=256),
     }
-    execs = {"fast": SleepExecutor(rate=1e6), "doomed": LateFailExecutor()}
-    s = DynamicScheduler(groups, execs, alpha=0.5)
+    execs = {"fast": GatedFastExecutor(rate=1e6, clock=vclock.now,
+                                       sleep=vclock.sleep),
+             "doomed": LateFailExecutor()}
+    s = DynamicScheduler(groups, execs, alpha=0.5, clock=vclock.now)
     s.start()
     try:
         res = s.submit_epoch((0, 4_000)).result(timeout=30)
