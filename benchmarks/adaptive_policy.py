@@ -1,0 +1,299 @@
+"""Adaptive policy vs. static baselines: decision stability, tail delay,
+and the sharded λ-tracker's completion-path lock cost.
+
+Four experiments, all deterministic (seeded RNGs, virtual clocks for the
+admission sims, zero-service SleepExecutors for the runtime ones):
+
+  * square_wave / heavy_tail — an admission gate fed synthetic arrival
+    patterns on a virtual clock, drained at exact capacity. Measures
+    ADMIT↔DEFER decision flips (oscillation) and the p99 *actual* queue
+    delay of admitted jobs, static (point-sample) vs. adaptive (windowed
+    hysteresis). The adaptive gate should flip less and keep the
+    admitted-tail delay lower on both patterns.
+  * rebalance — a straggler report flapping around the detection
+    threshold, applied to the gate every tick. Measures applied derate
+    changes: the cooldown should cut oscillation by ~the flap/cooldown
+    ratio without ever starving a persistent change.
+  * completion_lock — the real threaded runtime at 8 workers with the
+    sharded ThroughputTracker vs. the single-lock baseline injected into
+    the same scheduler. Measures the *tracker's* completion-path lock
+    wait (the shared-lock cost PR 8 eliminates) with full work-
+    conservation checks, plus a single-worker ``chunk_mode="paper"``
+    bit-compatibility cross-check: both trackers must produce the
+    identical chunk schedule.
+
+Run:  PYTHONPATH=src python -m benchmarks.run --only adaptive_policy
+      PYTHONPATH=src python -m benchmarks.adaptive_policy
+"""
+from __future__ import annotations
+
+import random
+import sys
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.core import (DeviceKind, DynamicScheduler, GroupSpec,
+                        LockedThroughputTracker, ScheduleResult,
+                        SleepExecutor)
+from repro.policy import AdaptivePolicy
+from repro.queue import Job, JobState
+from repro.queue.admission import AdmissionController, Decision
+from repro.queue.manager import QueueManager
+
+CAPACITY = 100.0                     # items/s the simulated fleet serves
+SLO_S = 0.5                          # delay band edge: 50-item backlog
+DT = 0.02                            # virtual tick
+SIM_S = 8.0
+QUICK_SIM_S = 2.0
+LOCK_ITEMS = 120_000
+QUICK_LOCK_ITEMS = 12_000
+
+
+# ---------------------------------------------------------------------------
+# admission simulation on a virtual clock
+# ---------------------------------------------------------------------------
+
+def _arrivals_square(t: float, rng: random.Random) -> List[int]:
+    """1s ON at 2.5× capacity / 1s OFF: the backlog slams into the SLO
+    band edge a third of the way through each burst and hovers there —
+    the point-sample gate's worst case (admit/defer flapping)."""
+    if int(t) % 2 == 0:
+        return [1] * 5                        # 5 jobs/tick = 250 items/s
+    return []
+
+
+def _arrivals_heavy(t: float, rng: random.Random) -> List[int]:
+    """Poisson-ish arrivals with Pareto job sizes (~1.3× capacity on
+    average) plus a trickle of small jobs: heavy-tailed lumps slam the
+    backlog through the band edge while the trickle keeps sampling it."""
+    out = []
+    if rng.random() < 0.9:                    # ~45 lumps/s
+        out.append(min(40, max(1, int(rng.paretovariate(1.2)))))
+    if rng.random() < 0.5:                    # ~25 small jobs/s
+        out.append(1)
+    return out
+
+
+def _sim_admission(pattern, adaptive: bool, sim_s: float) \
+        -> Tuple[float, float, int, Dict[str, int]]:
+    """Returns (p99 queue delay, mean queue delay, decision flips,
+    counts) over served jobs. Deferred jobs are shed (the band's purpose
+    is to keep them off the queue). The drain is completion-based fluid
+    service at exactly CAPACITY items/s: a job leaves the queue only
+    once capacity has had time to cover it, so it stays in
+    ``backlog_items`` until then and the gate's projection is exact —
+    negative-credit drains would let the gate undercount committed
+    work and smear delays past the SLO for both modes."""
+    t = [0.0]
+    q = QueueManager()
+    policy = AdaptivePolicy(window_s=1.0, spike_threshold=3.0,
+                            cooldown_s=1.0, clock=lambda: t[0]) \
+        if adaptive else None
+    adm = AdmissionController(q, tracker=None, slo_delay_s=SLO_S,
+                              clock=lambda: t[0], policy=policy)
+    adm.on_group_join("fleet", CAPACITY)
+    rng = random.Random(1234)
+    admitted_at: Dict[str, float] = {}
+    delays: List[float] = []
+    flips = 0
+    last: Optional[bool] = None
+    credit = 0.0
+    counts = {"admitted": 0, "deferred": 0, "rejected": 0}
+    while t[0] < sim_s:
+        for items in pattern(t[0], rng):
+            job = Job(items=items)
+            dec = adm.admit(job)
+            counts[{Decision.ADMIT: "admitted",
+                    Decision.DEFER: "deferred",
+                    Decision.REJECT: "rejected"}[dec.decision]] += 1
+            is_admit = dec.decision is Decision.ADMIT
+            if is_admit:
+                admitted_at[job.job_id] = t[0]
+            if last is not None and is_admit != last:
+                flips += 1
+            last = is_admit
+        head = q.peek()
+        if head is None:
+            credit = 0.0                      # idle: no banked capacity
+        else:
+            credit += CAPACITY * DT
+            while head is not None and credit >= head.items:
+                credit -= head.items
+                q.pop()
+                q.mark_running(head)
+                q.mark_finished(head, JobState.DONE)
+                delays.append(t[0] - admitted_at.pop(head.job_id))
+                head = q.peek()
+        t[0] += DT
+    delays.sort()
+    p99 = delays[min(len(delays) - 1,
+                     int(0.99 * len(delays)))] if delays else 0.0
+    mean = sum(delays) / len(delays) if delays else 0.0
+    return p99, mean, flips, counts
+
+
+def _sim_rows(name: str, pattern, sim_s: float) \
+        -> List[Tuple[str, float, str]]:
+    out = []
+    results = {}
+    for label, adaptive in (("static", False), ("adaptive", True)):
+        p99, mean, flips, counts = _sim_admission(pattern, adaptive, sim_s)
+        results[label] = (p99, flips)
+        out.append((
+            f"adaptive_policy/{name}/{label}",
+            p99 * 1e6,      # virtual-µs p99 queue delay of served jobs
+            f"flips={flips};mean_delay_ms={mean * 1e3:.1f};"
+            f"admitted={counts['admitted']};"
+            f"deferred={counts['deferred']};"
+            f"rejected={counts['rejected']}"))
+    if results["adaptive"][0] > results["static"][0] or \
+            results["adaptive"][1] >= results["static"][1]:
+        raise RuntimeError(
+            f"adaptive_policy/{name}: adaptive gate must beat static on "
+            f"p99 and flips, got {results}")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# rebalance oscillation
+# ---------------------------------------------------------------------------
+
+def _sim_rebalance(adaptive: bool, sim_s: float) -> Tuple[int, Dict]:
+    """A group flapping around the straggler threshold: reported derated
+    on even ticks, recovered on odd ticks, every 0.1 virtual seconds."""
+    t = [0.0]
+    q = QueueManager()
+    policy = AdaptivePolicy(cooldown_s=1.0, clock=lambda: t[0]) \
+        if adaptive else None
+    adm = AdmissionController(q, tracker=None, slo_delay_s=SLO_S,
+                              clock=lambda: t[0], policy=policy)
+    adm.on_group_join("a", CAPACITY)
+    adm.on_group_join("b", CAPACITY)
+    changes, i = 0, 0
+    last = adm.derate("a")
+    while t[0] < sim_s:
+        adm.update_stragglers({"a": 0.45} if i % 2 == 0 else {})
+        cur = adm.derate("a")
+        if cur != last:
+            changes += 1
+            last = cur
+        i += 1
+        t[0] += 0.1
+    stats = policy.stats() if policy is not None else {}
+    return changes, stats
+
+
+def _rebalance_rows(sim_s: float) -> List[Tuple[str, float, str]]:
+    out = []
+    for label, adaptive in (("static", False), ("adaptive", True)):
+        changes, stats = _sim_rebalance(adaptive, sim_s)
+        derived = f"applied_changes={changes}"
+        if stats:
+            derived += (f";suppressed={int(stats['rebalances_suppressed'])}"
+                        f";applied={int(stats['rebalances'])}")
+        # the metric IS the oscillation count (µs column reused)
+        out.append((f"adaptive_policy/rebalance/{label}",
+                    float(changes), derived))
+    if adaptive and changes == 0:
+        raise RuntimeError("cooldown starved every rebalance")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# completion-path tracker lock cost on the real runtime
+# ---------------------------------------------------------------------------
+
+def _build(n_workers: int, chunk_mode: str, tracker_cls) -> DynamicScheduler:
+    groups = {
+        f"g{i}": GroupSpec(f"g{i}", DeviceKind.BIG, init_throughput=1.0,
+                           min_chunk=8)
+        for i in range(n_workers)}
+    execs = {name: SleepExecutor(rate=float("inf")) for name in groups}
+    sched = DynamicScheduler(groups, execs, alpha=0.5, base_quantum=64,
+                             chunk_mode=chunk_mode)
+    if tracker_cls is not None:
+        sched.tracker = tracker_cls(sched.alpha)   # before start(): the
+    return sched                                   # partitioner binds it
+
+
+def _check(res: ScheduleResult, items: int, label: str) -> None:
+    if res.iterations != items:
+        raise RuntimeError(f"{label}: covered {res.iterations}/{items}")
+    if sum(res.per_group_items.values()) != res.iterations:
+        raise RuntimeError(f"{label}: per-group accounting mismatch")
+    covered = sum(r.token.chunk.size for r in res.records)
+    if covered != res.iterations:
+        raise RuntimeError(f"{label}: chunks cover {covered}")
+
+
+def _paper_identity_check(items: int) -> None:
+    """Single worker, chunk_mode="paper": the sharded tracker must yield
+    the bit-identical schedule the locked tracker does."""
+    sig = {}
+    for label, cls in (("sharded", None), ("locked", LockedThroughputTracker)):
+        sched = _build(1, "paper", cls)
+        res = sched.run(0, items)
+        sched.shutdown()
+        _check(res, items, f"adaptive_policy/paper_identity/{label}")
+        sig[label] = (res.iterations, res.per_group_items,
+                      [(r.token.chunk.begin, r.token.chunk.end)
+                       for r in res.records])
+    if sig["sharded"] != sig["locked"]:
+        raise RuntimeError(
+            "paper-mode schedule diverged between sharded and locked "
+            "trackers (bit-compatibility broken)")
+
+
+def _lock_rows(items: int) -> List[Tuple[str, float, str]]:
+    _paper_identity_check(max(1000, items // 10))
+    out = []
+    for label, cls in (("sharded", None),
+                       ("locked", LockedThroughputTracker)):
+        sched = _build(8, "range", cls)
+        res = sched.run(0, items)
+        tracker = sched.tracker
+        sched.shutdown()
+        _check(res, items, f"adaptive_policy/completion_lock/{label}")
+        lock = tracker.contention_stats()
+        host = sum((r.tc2 - r.tc1) + max(r.tc3 - r.tg5, 0.0)
+                   for r in res.records) / len(res.records)
+        out.append((
+            f"adaptive_policy/completion_lock/{label}/w8",
+            lock["lock_wait_s"] * 1e6,
+            f"lock_acquires={int(lock['lock_acquires'])};"
+            f"host_us_per_chunk={host * 1e6:.3f};"
+            f"chunks={len(res.records)};items={items}"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+
+def _rows(sim_s: float, items: int) -> List[Tuple[str, float, str]]:
+    out: List[Tuple[str, float, str]] = []
+    out += _sim_rows("square_wave", _arrivals_square, sim_s)
+    out += _sim_rows("heavy_tail", _arrivals_heavy, sim_s)
+    out += _rebalance_rows(sim_s)
+    out += _lock_rows(items)
+    return out
+
+
+def rows_adaptive_policy() -> List[Tuple[str, float, str]]:
+    return _rows(SIM_S, LOCK_ITEMS)
+
+
+def rows_adaptive_policy_quick() -> List[Tuple[str, float, str]]:
+    """Small profile for scripts/smoke.sh — same checks, tiny sizes."""
+    return _rows(QUICK_SIM_S, QUICK_LOCK_ITEMS)
+
+
+ALL = [rows_adaptive_policy]
+QUICK = [rows_adaptive_policy_quick]
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for fn in ALL:
+        for name, us, derived in fn():
+            print(f"{name},{us:.3f},{derived}")

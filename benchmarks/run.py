@@ -8,8 +8,15 @@ simulator figures are exact reproductions of the paper's experiment grid
 actual threaded scheduler runtime on this host; `batch_boundary/` rows
 compare the rebuild-per-batch and persistent-runtime serving drains.
 
+``--check BENCH_N.json`` compares the run against a committed snapshot
+and exits non-zero when any same-name row regresses past
+``--check-tol`` × its snapshot value (floored at 5µs so nanosecond-scale
+rows don't trip on scheduler jitter) — the perf-regression gate
+scripts/smoke.sh runs on every change.
+
 Run:  PYTHONPATH=src python -m benchmarks.run [--json out.json]
                                               [--only batch_boundary]
+                                              [--check BENCH_8.json]
 """
 from __future__ import annotations
 
@@ -41,8 +48,19 @@ def main() -> None:
                          "with a quick variant (dispatch_overhead, which "
                          "fails hard on an old/new schedule-result "
                          "mismatch) — wired into scripts/smoke.sh")
+    ap.add_argument("--check", default=None, metavar="PATH",
+                    help="compare against a committed JSON snapshot "
+                         "(from --out) and exit 1 if any overlapping row "
+                         "regresses past --check-tol × its snapshot "
+                         "us_per_call")
+    ap.add_argument("--check-tol", type=float, default=3.0,
+                    metavar="FACTOR",
+                    help="regression tolerance factor for --check "
+                         "(default 3.0; snapshot values floored at 5µs)")
     args = ap.parse_args()
 
+    from benchmarks.adaptive_policy import ALL as ADAPTIVE, \
+        QUICK as ADAPTIVE_QUICK
     from benchmarks.batch_boundary import ALL as BOUNDARY
     from benchmarks.dispatch_overhead import ALL as DISPATCH, \
         QUICK as DISPATCH_QUICK
@@ -54,9 +72,9 @@ def main() -> None:
     from benchmarks.tenant_fairness import ALL as TENANT
 
     everything = PAPER + QUEUE + BOUNDARY + TENANT + DISPATCH \
-        + TELEMETRY + LATENCY
+        + TELEMETRY + LATENCY + ADAPTIVE
     if args.quick:
-        everything = DISPATCH_QUICK + TELEMETRY_QUICK
+        everything = DISPATCH_QUICK + TELEMETRY_QUICK + ADAPTIVE_QUICK
     wanted = [s.strip() for s in args.only.split(",") if s.strip()] \
         if args.only else []
     suites = [fn for fn in everything
@@ -77,6 +95,38 @@ def main() -> None:
         with open(out_path, "w", encoding="utf-8") as fh:
             json.dump(rows, fh, indent=2)
             fh.write("\n")
+    if args.check:
+        _check(rows, args.check, args.check_tol, ap)
+
+
+def _check(rows, snap_path, tol, ap) -> None:
+    """Tolerance-based perf-regression gate against a committed snapshot.
+    Only same-name rows are compared (a snapshot from a different profile
+    simply has no overlap and is an error); derived-ratio rows (names
+    containing "speedup") are skipped — their us column is a ratio, not a
+    cost, and a *higher* value is better."""
+    with open(snap_path, encoding="utf-8") as fh:
+        base = {r["name"]: float(r["us_per_call"]) for r in json.load(fh)}
+    overlap = [r for r in rows
+               if r["name"] in base and "speedup" not in r["name"]]
+    if not overlap:
+        ap.error(f"--check {snap_path!r}: no overlapping benchmark rows "
+                 f"(snapshot from a different profile?)")
+    bad = []
+    for r in overlap:
+        limit = tol * max(base[r["name"]], 5.0)
+        if r["us_per_call"] > limit:
+            bad.append(f"  {r['name']}: {r['us_per_call']:.3f}us > "
+                       f"{limit:.3f}us "
+                       f"(snapshot {base[r['name']]:.3f}us x tol {tol:g})")
+    if bad:
+        print(f"PERF REGRESSION vs {snap_path} ({len(bad)} of "
+              f"{len(overlap)} rows):", file=sys.stderr)
+        for line in bad:
+            print(line, file=sys.stderr)
+        sys.exit(1)
+    print(f"perf check ok: {len(overlap)} rows within {tol:g}x of "
+          f"{snap_path}")
 
 
 if __name__ == "__main__":

@@ -8,12 +8,18 @@
 # benchmark in its tiny --quick profile, which fails hard on a
 # schedule-result mismatch between the lock-per-token and range/steal
 # hot paths (and the telemetry-overhead ratio gate, which fails hard if
-# instrumentation cost creeps back onto the hot path); stage 4 is the
+# instrumentation cost creeps back onto the hot path), checked against
+# the committed BENCH_8.json snapshot so a perf regression past 3× on
+# any quick-profile row fails the build; stage 4 is the
 # telemetry stage — a queued serve with --metrics-out whose JSONL feed is
 # validated for the key metric families; stage 5 is the preemption stage
 # — a mixed-tier queued serve (express lane on) whose metrics must show
 # express batches forming, then a tight-deadline serve whose metrics
-# must show the deadline-miss counter firing; stage 6 runs everything
+# must show the deadline-miss counter firing; stage 6 is the
+# idle-efficiency stage — a queued serve parked on an empty queue for
+# 1.5s whose drain must accrue only fallback-timeout wakeups (the
+# event-driven drain's liveness backstop, ≤ 1/fallback_s per second —
+# a busy-poll regression shows up as hundreds); stage 7 runs everything
 # else except the slow-marked integration / model-compile tests.
 # Full suite: `python -m pytest -q`.
 set -euo pipefail
@@ -22,7 +28,7 @@ python -m pytest -q -x -m "not slow" \
   tests/test_scheduler.py tests/test_partitioner.py tests/test_queue.py \
   tests/test_dispatch_hotpath.py
 python -m pytest -q -x -m "not slow" tests/test_tenancy.py
-python -m benchmarks.run --quick
+python -m benchmarks.run --quick --check BENCH_8.json
 SMOKE_TMP="$(mktemp -d)"
 trap 'rm -rf "$SMOKE_TMP"' EXIT
 # pytest picks src/ up from pyproject pythonpath and benchmarks.run
@@ -72,6 +78,28 @@ misses = sum(v for k, v in c.items() if k.startswith("svc.deadline_misses"))
 assert misses > 0, f"0.5ms-deadline serve missed no deadlines: {sorted(c)}"
 print(f"preemption smoke ok: {express:.0f} express batches, "
       f"{misses:.0f} deadline misses")
+EOF
+python -m repro.launch.serve --arch yi-6b --reduced --queue \
+  --requests 8 --job-items 2 --idle-s 1.5 \
+  --metrics-out "$SMOKE_TMP/idle.jsonl" --metrics-interval 0.2 \
+  > /dev/null
+python - "$SMOKE_TMP" <<'EOF'
+import sys
+from pathlib import Path
+from repro.telemetry import read_jsonl
+c = read_jsonl(Path(sys.argv[1]) / "idle.jsonl")[-1]["counters"]
+timeouts = sum(v for k, v in c.items()
+               if k.startswith("svc.drain_wakeups") and "timeout" in k)
+events = sum(v for k, v in c.items()
+             if k.startswith("svc.drain_wakeups") and "event" in k)
+# 1.5s idle + the serve itself: an event-driven drain times out at most
+# once per fallback_s (2s) plus a couple of bounded run_until_idle waits
+assert timeouts <= 5, \
+    f"idle drain busy-polling: {timeouts:.0f} timeout wakeups " \
+    f"(event wakeups: {events:.0f})"
+assert events > 0, "drain never woke on an event"
+print(f"idle-efficiency smoke ok: {events:.0f} event wakeups, "
+      f"{timeouts:.0f} fallback timeouts over a 1.5s idle tail")
 EOF
 exec python -m pytest -q -m "not slow" \
   --ignore=tests/test_scheduler.py --ignore=tests/test_partitioner.py \

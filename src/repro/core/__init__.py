@@ -5,7 +5,9 @@ Paper: "Reducing overheads of dynamic scheduling on heterogeneous chips"
 """
 from repro.core.types import (Chunk, ChunkRecord, DeviceKind, GroupSpec,
                               IterationSpace, Token)
-from repro.core.throughput import ThroughputTracker, GroupStats
+from repro.core.locks import TimedLock
+from repro.core.throughput import (GroupStats, LockedThroughputTracker,
+                                   ThroughputTracker)
 from repro.core.partitioner import HeterogeneousPartitioner
 from repro.core.chunk_search import SearchTrace, occupancy_seed, search_chunk
 from repro.core.overheads import OverheadLedger, OverheadTotals
@@ -22,7 +24,8 @@ from repro.core.simulate import SimConfig, SimResult, simulate, run_config, \
 
 __all__ = [
     "Chunk", "ChunkRecord", "DeviceKind", "GroupSpec", "IterationSpace",
-    "Token", "ThroughputTracker", "GroupStats", "HeterogeneousPartitioner",
+    "Token", "ThroughputTracker", "LockedThroughputTracker", "TimedLock",
+    "GroupStats", "HeterogeneousPartitioner",
     "SearchTrace", "occupancy_seed", "search_chunk", "OverheadLedger",
     "OverheadTotals", "CallableExecutor", "ChunkExecutor", "ChunkFailure",
     "JaxChunkExecutor", "SleepExecutor", "try_boost_priority",

@@ -53,6 +53,7 @@ import weakref
 from typing import Dict, Optional
 
 from repro import telemetry as telemetry_mod
+from repro.core.locks import TimedLock
 from repro.core.throughput import ThroughputTracker
 from repro.core.types import Chunk, DeviceKind, GroupSpec, IterationSpace, \
     Token
@@ -61,29 +62,9 @@ clock = time.monotonic
 
 CHUNK_MODES = ("range", "paper")
 
-
-class _TimedLock:
-    """threading.Lock accumulating acquire-wait time — the lock-wait
-    metric the dispatch-overhead benchmark reports. Two clock reads per
-    acquire; only the global/refill path pays them in range mode."""
-
-    __slots__ = ("_lock", "wait_s", "acquires")
-
-    def __init__(self):
-        self._lock = threading.Lock()
-        self.wait_s = 0.0
-        self.acquires = 0
-
-    def __enter__(self) -> "_TimedLock":
-        t0 = clock()
-        self._lock.acquire()
-        # mutated under the lock just acquired: no torn updates
-        self.wait_s += clock() - t0
-        self.acquires += 1
-        return self
-
-    def __exit__(self, *exc) -> None:
-        self._lock.release()
+# compat alias: the wait-instrumented lock moved to repro.core.locks so
+# the throughput tracker can share it without a circular import
+_TimedLock = TimedLock
 
 
 class _GroupRange:
@@ -108,7 +89,8 @@ class HeterogeneousPartitioner:
     def __init__(self, space: IterationSpace, groups: Dict[str, GroupSpec],
                  tracker: ThroughputTracker,
                  base_quantum: int = 256, chunk_mode: str = "range",
-                 refill_chunks: int = 8, telemetry=None):
+                 refill_chunks: int = 8, adaptive_refill: bool = False,
+                 telemetry=None):
         if chunk_mode not in CHUNK_MODES:
             raise ValueError(f"chunk_mode must be one of {CHUNK_MODES}, "
                              f"got {chunk_mode!r}")
@@ -118,6 +100,17 @@ class HeterogeneousPartitioner:
         self.base_quantum = base_quantum
         self.chunk_mode = chunk_mode
         self.refill_chunks = max(1, refill_chunks)
+        # history-driven refill sizing (range mode): the refill quota
+        # grows when the observed steal rate is low (well-sized grants —
+        # amortize more per global-lock acquire) and shrinks when it is
+        # high (grants keep getting clawed back — stop banking them),
+        # and a grant near space exhaustion is capped at a fair share of
+        # the tail so one group cannot hoard the end of the space and
+        # straggle. Off by default at this level (the library contract
+        # is plain λ-share refills); DynamicScheduler turns it on.
+        self.adaptive_refill = adaptive_refill
+        self._refills = 0           # mutated under the global lock only
+        self._steals = 0
         self._lock = _TimedLock()
         # refill/steal/reclaim/requeue counters + a lock-wait collector;
         # all off the range-mode fast path (they fire only where the
@@ -342,6 +335,7 @@ class HeterogeneousPartitioner:
                                  name, g.kind)
             chunk = self.chunk_size_for(name)
             stats = self.tracker.stats(name)
+            quota = self._refill_quota_locked()
             if stats is None or stats.n == 0:
                 # cold start: λ is still the seed, so a multi-chunk grant
                 # would bank work on a guess (a slow group could hoard a
@@ -353,31 +347,71 @@ class HeterogeneousPartitioner:
                 total_lam = sum(self.tracker.get(n_)
                                 for n_ in self.groups) or 1.0
                 # λ-share of the remaining space, at least one chunk, at
-                # most refill_chunks chunks: big enough to amortize the
-                # refill, small enough that a mis-sized grant is cheap
-                # to steal back
-                want = min(self.refill_chunks * chunk,
+                # most the refill quota in chunks: big enough to amortize
+                # the refill, small enough that a mis-sized grant is
+                # cheap to steal back
+                want = min(quota * chunk,
                            max(chunk, int(sp.remaining * lam / total_lam)))
+                if self.adaptive_refill:
+                    tail = sp.remaining
+                    n_groups = max(1, len(self.groups))
+                    if tail <= quota * chunk * n_groups:
+                        # near exhaustion: a full λ-share grant here is
+                        # tail hoarding (peers finish and must steal it
+                        # back one half at a time) — cap at a fair share
+                        want = max(chunk, min(want, tail // n_groups))
             c = sp.take(want)
             if c is None:
                 c = self._steal_locked(sp, name, chunk)
                 if c is None:
                     return None
+                self._steals += 1
                 if self.telemetry is not None:
                     self._count("part.steals")
                     self._count("part.stolen_items", c.size)
                     self.telemetry.tracer.instant(
                         "range_steal", tid="partitioner",
                         thief=name, items=c.size)
-            elif self.telemetry is not None:
-                self._count("part.refills")
-                self._count("part.refill_items", c.size)
+            else:
+                self._refills += 1
+                if self.telemetry is not None:
+                    self._count("part.refills")
+                    self._count("part.refill_items", c.size)
             with st.lock:
                 st.chunk = chunk
                 st.lo, st.hi = c.begin, c.end
                 n = min(chunk, st.hi - st.lo)
                 lo, st.lo = st.lo, st.lo + n
             return Token(Chunk(lo, lo + n, c.seq), name, g.kind)
+
+    def _refill_quota_locked(self, min_total: int = 8,
+                             low: float = 0.05, high: float = 0.25) -> int:
+        """Effective refill size in chunks. Static (``refill_chunks``)
+        unless adaptive: after ``min_total`` refill/steal events the
+        observed steal rate steers it — ≤ ``low`` doubles the quota
+        (grants are landing where the work is; amortize more per
+        global-lock acquire), ≥ ``high`` halves it (grants keep getting
+        stolen back; stop banking work on stale λ)."""
+        if not self.adaptive_refill:
+            return self.refill_chunks
+        total = self._refills + self._steals
+        if total >= min_total:
+            rate = self._steals / total
+            if rate >= high:
+                return max(1, self.refill_chunks // 2)
+            if rate <= low:
+                return self.refill_chunks * 2
+        return self.refill_chunks
+
+    def refill_stats(self) -> Dict[str, float]:
+        """Refill/steal event counts + the current effective refill quota
+        (chunks) — the adaptive-refill feedback state, for benchmarks and
+        tests. Read under the global lock (same consistency contract as
+        ``contention_stats``)."""
+        with self._lock._lock:
+            return {"refills": float(self._refills),
+                    "steals": float(self._steals),
+                    "refill_quota": float(self._refill_quota_locked())}
 
     def _steal_locked(self, sp: IterationSpace, name: str,
                       chunk: int) -> Optional[Chunk]:

@@ -116,10 +116,24 @@ class EpochHandle:
         self._failed: List[str] = []
         self._event = threading.Event()
         self._result: Optional[ScheduleResult] = None
+        self._cb_lock = threading.Lock()
+        self._callbacks: List = []
 
     @property
     def finalized(self) -> bool:
         return self._event.is_set()
+
+    def add_done_callback(self, fn) -> None:
+        """Call ``fn(self)`` when the epoch finalizes (immediately if it
+        already has). Callbacks run on the finalizing dispatcher thread
+        while the runtime lock is held, so they must be cheap and
+        non-blocking — setting an event, bumping a counter. The JobService
+        drain loop uses this for event-driven wakeups on completion."""
+        with self._cb_lock:
+            if not self._event.is_set():
+                self._callbacks.append(fn)
+                return
+        fn(self)
 
     def done(self) -> bool:
         return self._event.is_set()
@@ -138,10 +152,15 @@ class DynamicScheduler:
                  executors: Dict[str, ChunkExecutor],
                  alpha: float = 1.0, base_quantum: int = 256,
                  chunk_mode: str = "range", finalize_batch: int = 8,
-                 telemetry=None, clock=None):
+                 telemetry=None, clock=None, adaptive_refill: bool = True):
         assert set(groups) == set(executors)
         self.specs = dict(groups)
         self.executors = dict(executors)
+        # history-driven refill sizing (see HeterogeneousPartitioner.
+        # _refill_quota_locked) — on by default for the runtime; "paper"
+        # chunk mode takes per-token grants and never consults the quota,
+        # so bit-compatibility is unaffected either way
+        self.adaptive_refill = adaptive_refill
         # injectable time source (tests/clock.py VirtualClock): every
         # scheduler-side stamp and deadline comparison goes through it
         self.clock = clock if clock is not None else globals()["clock"]
@@ -213,6 +232,7 @@ class DynamicScheduler:
             self.partitioner = HeterogeneousPartitioner(
                 IterationSpace(0, 0), self.specs, self.tracker,
                 self.base_quantum, chunk_mode=self.chunk_mode,
+                adaptive_refill=self.adaptive_refill,
                 telemetry=self.telemetry
                 if self.telemetry is not None else telemetry_mod.OFF)
             for name in list(self.specs):
@@ -725,6 +745,10 @@ class DynamicScheduler:
             unfinished=h.space.remaining,
         )
         h._event.set()
+        with h._cb_lock:
+            cbs, h._callbacks = h._callbacks, []
+        for fn in cbs:
+            fn(h)
         if self.telemetry is not None:
             self.telemetry.registry.counter("sched.epochs_finalized").add()
             self.telemetry.tracer.span(

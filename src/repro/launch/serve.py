@@ -38,6 +38,7 @@ from repro.configs.registry import get_config
 from repro.core.energy import EnergyModel, PowerSpec
 from repro.core.types import TIERS
 from repro.launch.train import parse_groups
+from repro.policy import AdaptivePolicy
 from repro.queue import Job
 from repro.serve.engine import HeteroServeEngine
 from repro.telemetry import MetricsExporter, Telemetry
@@ -121,6 +122,25 @@ def main():
     ap.add_argument("--sample-rate", type=float, default=1.0,
                     help="fraction of chunks traced (deterministic by "
                          "chunk seq)")
+    ap.add_argument("--policy-window", type=float, default=5.0,
+                    help="adaptive-policy sliding window seconds for "
+                         "admission smoothing / spike detection in "
+                         "--queue mode (0 disables the policy)")
+    ap.add_argument("--spike-threshold", type=float, default=3.0,
+                    help="a projected delay this many × the windowed "
+                         "median counts as a load spike")
+    ap.add_argument("--cooldown-s", type=float, default=1.0,
+                    help="minimum seconds between applied straggler "
+                         "capacity rebalances")
+    ap.add_argument("--adaptive-refill",
+                    action=argparse.BooleanOptionalAction, default=True,
+                    help="steal-rate-driven refill sizing in the range "
+                         "partitioner (--no-adaptive-refill: fixed "
+                         "refill quota)")
+    ap.add_argument("--idle-s", type=float, default=0.0,
+                    help="keep the drain daemon alive this long after "
+                         "the queue empties (idle-efficiency probe: "
+                         "near-zero wakeups expected)")
     args = ap.parse_args()
     if args.job_items < 1:
         ap.error("--job-items must be >= 1")
@@ -179,7 +199,8 @@ def main():
     eng = HeteroServeEngine(cfg, groups, prompt_len=args.prompt_len,
                             decode_tokens=args.decode_tokens,
                             seed=args.seed, chunk_mode=args.chunk_mode,
-                            telemetry=tel)
+                            telemetry=tel,
+                            adaptive_refill=args.adaptive_refill)
     exporter.start()
     try:
         _run(args, ap, eng, groups, registry, energy_model)
@@ -209,13 +230,20 @@ def _run(args, ap, eng, groups, registry, energy_model):
                     deadline_s=deadline_s,
                     tenant=names[i % len(names)])
                 for i, n in enumerate(sizes)]
+        policy = None
+        if args.policy_window > 0:
+            policy = AdaptivePolicy(window_s=args.policy_window,
+                                    spike_threshold=args.spike_threshold,
+                                    cooldown_s=args.cooldown_s,
+                                    telemetry=eng.telemetry)
         rep = eng.serve_jobs(jobs, slo_delay_s=args.slo,
                              batch_jobs=args.batch_jobs,
                              journal_path=args.journal,
                              pipeline_depth=args.pipeline_depth,
                              persistent=not args.rebuild_per_batch,
                              tenants=registry, energy_model=energy_model,
-                             express=not args.no_express)
+                             express=not args.no_express,
+                             policy=policy, idle_s=args.idle_s)
         out = {
             "jobs": rep.jobs, "done": rep.done, "failed": rep.failed,
             "cancelled": rep.cancelled, "requeues": rep.requeues,

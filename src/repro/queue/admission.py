@@ -40,6 +40,18 @@ candidate — so an underloaded tenant admitting into an empty shard sees
 (up to weighted contention) the full capacity, never another tenant's
 backlog (work conservation at the admission gate, mirroring the DWRR
 drain). Without a registry the legacy global gate is unchanged.
+
+Idle probing (policy mode only): the capacity estimate is *measured* —
+λ-EWMAs only move when chunks complete. A gate that defers everything
+therefore freezes its own evidence: nothing runs, λ never refreshes, and
+a stale-low estimate (e.g. one compile-polluted first batch) projects
+every future job past the SLO forever. When the smoothed gate says
+defer/reject but the gate's population is completely idle (zero backlog
+AND zero unfinished work), the projection is unfalsifiable and the job
+would start immediately — a queue-delay SLO cannot be violated — so the
+gate admits it as a probe to refresh the estimate. Exactly one probe is
+in flight per population (the probe itself becomes unfinished work, so
+the next candidate defers normally).
 """
 from __future__ import annotations
 
@@ -81,13 +93,19 @@ class AdmissionController:
                  slo_delay_s: float = 1.0,
                  defer_factor: float = 4.0,
                  min_capacity: float = 1e-6,
-                 registry=None, telemetry=None, clock=None):
+                 registry=None, telemetry=None, clock=None, policy=None):
         self.queue = queue
         self.tracker = tracker
         self.ledger = ledger
         self.slo_delay_s = slo_delay_s
         self.defer_factor = defer_factor
         self.min_capacity = min_capacity
+        # optional repro.policy.AdaptivePolicy (duck-typed): smooths the
+        # gate's projected delay over a sliding window (hysteresis — the
+        # gate rises with a spike instantly, decays slowly) and gates
+        # straggler rebalances behind a cooldown. None → point-in-time
+        # decisions, the original behavior.
+        self.policy = policy
         # injectable job-clock (tests/clock.py); default follows
         # repro.queue.job.now at call time so a monkeypatched job clock
         # and the deadline gate can never disagree on "now"
@@ -113,6 +131,9 @@ class AdmissionController:
         # shedding — serving them would burn capacity on a guaranteed
         # deadline miss); subset of ``rejected``
         self.deadline_rejects = 0
+        # admits forced through a defer/reject verdict because the gate's
+        # population was idle (see module docstring); subset of ``admitted``
+        self.idle_probes = 0
         self.per_tenant: Dict[str, Dict[str, int]] = {}
         # metrics: admission.decisions{decision,tenant} counters plus a
         # projected-delay histogram (the gate's own view of backlog)
@@ -159,11 +180,22 @@ class AdmissionController:
         """Replace the derate map from a detector observation: groups
         reported straggling advertise ``slowdown`` (current λ / healthy
         baseline, clamped to [0.05, 1.0]) of their capacity; groups no
-        longer reported recover full weight."""
+        longer reported recover full weight.
+
+        With a policy attached the proposed map must clear its rebalance
+        gate first: insignificant changes are dropped, and significant
+        ones inside the post-rebalance cooldown are suppressed (counted)
+        so a group flapping around the straggler threshold cannot thrash
+        the advertised capacity."""
         with self._lock:
-            self._derate = {
-                name: min(1.0, max(0.05, f))
-                for name, f in slowdowns.items() if name in self._groups}
+            new = {name: min(1.0, max(0.05, f))
+                   for name, f in slowdowns.items() if name in self._groups}
+            old = dict(self._derate)
+        if self.policy is not None and \
+                not self.policy.allow_rebalance(self.now(), new, old):
+            return
+        with self._lock:
+            self._derate = new
 
     def derate(self, name: str) -> float:
         with self._lock:
@@ -323,7 +355,8 @@ class AdmissionController:
             return self._defer(job, delay, cap_t, at_quota)
         return self._gate(job, cap_t,
                           self._tenant_backlog_items(job.tenant), slo,
-                          prefix=f"tenant {job.tenant} ")
+                          prefix=f"tenant {job.tenant} ",
+                          key=job.tenant)
 
     # shared decision bookkeeping: counters, per-tenant counters (registry
     # mode only), lifecycle transition and rejection metadata live here so
@@ -373,23 +406,62 @@ class AdmissionController:
             f"projected delay {delay:.3f}s exceeds remaining deadline "
             f"budget {remaining:.3f}s")
 
+    def _population_unfinished(self, job: Job) -> int:
+        """Unfinished (admitted-or-running) jobs in the gate population
+        that would decide ``job`` — its tenant's shard in registry mode,
+        the whole queue otherwise. Only consulted on the idle-probe path
+        (gate said defer/reject AND backlog is zero), so the unsharded
+        fallback scan is off the admit hot path."""
+        if self.registry is not None:
+            unfinished_fn = getattr(self.queue, "unfinished", None)
+            if unfinished_fn is not None:
+                return unfinished_fn(job.tenant)
+            return sum(1 for j in self.queue.jobs()
+                       if j.tenant == job.tenant
+                       and j.state in (JobState.ADMITTED, JobState.RUNNING))
+        return sum(1 for j in self.queue.jobs()
+                   if j.state in (JobState.ADMITTED, JobState.RUNNING))
+
     def _gate(self, job: Job, cap: float, backlog: int, slo: float,
-              prefix: str) -> AdmissionDecision:
+              prefix: str, key: str = "*") -> AdmissionDecision:
         """The three-band ADMIT/DEFER/REJECT ladder, shared by the legacy
         global gate and the per-tenant gate (which differ only in which
-        capacity/backlog/SLO feed it)."""
+        capacity/backlog/SLO feed it — and, with a policy attached, in
+        ``key``: each gate population smooths over its own window)."""
         delay = (backlog + job.items) / cap
+        if self.policy is not None:
+            # windowed smoothing (serialized by _admit_lock): reacts
+            # instantly to rising load, projects the window's trend
+            # forward, and — given the SLO — latches DEFER until the
+            # recent high-water clears the band, killing ADMIT/DEFER
+            # flapping on point-sample noise
+            delay = self.policy.admission_delay(self.now(), delay,
+                                                slo=slo, key=key)
         infeasible = self._deadline_infeasible(job, delay, cap)
         if infeasible is not None:
             return infeasible
-        if delay <= slo:
+        probe = False
+        if delay > slo and self.policy is not None and backlog == 0 \
+                and self._population_unfinished(job) == 0:
+            # idle probe: with zero backlog and nothing unfinished the
+            # stale-low λ that produced this verdict can never refresh —
+            # deferring would livelock the population (see module
+            # docstring). The job starts immediately, so the queue-delay
+            # SLO is safe by construction.
+            probe = True
+            self.idle_probes += 1
+            if self.telemetry is not None:
+                self.telemetry.registry.counter(
+                    "admission.idle_probes", tenant=job.tenant).add()
+        if delay <= slo or probe:
             self.queue.put(job)
             self.admitted += 1
             if self.registry is not None:
                 self._count(job.tenant, Decision.ADMIT)
             self._tel_decision(Decision.ADMIT, job.tenant, delay)
             return AdmissionDecision(Decision.ADMIT, delay, cap,
-                                     tenant=job.tenant)
+                                     tenant=job.tenant,
+                                     reason="idle probe" if probe else "")
         if delay <= self.defer_factor * slo:
             return self._defer(job, delay, cap,
                                f"{prefix}projected delay {delay:.3f}s "

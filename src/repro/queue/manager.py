@@ -65,6 +65,16 @@ class QueueManager:
         self._seq = itertools.count()
         self._lock = threading.RLock()
         self._not_empty = threading.Condition(self._lock)
+        # arrival listeners (JobService drain wakeup): fired after every
+        # put/requeue, OUTSIDE the queue lock — a listener that acquires
+        # its own lock can never deadlock against a concurrent pop
+        self._listeners: List = []
+
+    def add_listener(self, fn) -> None:
+        """Register ``fn()`` to run after each job arrival (put/requeue).
+        Must be cheap and exception-free — typically ``Event.set``."""
+        with self._lock:
+            self._listeners.append(fn)
 
     def _evict_if_terminal(self, job: Job) -> None:
         if job.terminal:
@@ -86,6 +96,9 @@ class QueueManager:
             heapq.heappush(self._heap, (job.rank, job.priority,
                                         next(self._seq), job.job_id))
             self._not_empty.notify()
+            listeners = list(self._listeners)
+        for fn in listeners:
+            fn()
 
     def cancel(self, job_id: str) -> bool:
         """Cancel a queued (ADMITTED) job; heap entry removed lazily."""

@@ -126,6 +126,62 @@ class ServiceStats:
             self.batch_windows.append((submitted_at, finished_at))
 
 
+class DrainWakeup:
+    """Event-driven wakeup for the drain loop — replaces the fixed
+    ``poll_s`` sleep that made the service trade idle CPU burn against
+    dispatch latency. ``notify`` is fan-in from every source of new
+    drain work: queue arrival listeners (put/requeue), epoch
+    done-callbacks (completion frees a pipeline slot), submit(), and
+    stop(). ``wait`` parks the drain thread until a notify or a fallback
+    timeout (liveness backstop for duck-typed queues without listeners).
+
+    Lost-notify safety: every notify happens AFTER its state change is
+    visible, and the loop always pumps after waking — so a notify that
+    races the event-clear can at worst cause one extra (cheap) pump, never
+    a missed job. Counters are plain ints (GIL-atomic +=, observability
+    only): ``event_wakeups`` vs ``timeout_wakeups`` is the idle-efficiency
+    signal scripts/smoke.sh asserts on.
+    """
+
+    def __init__(self):
+        self._event = threading.Event()
+        self.notified = 0
+        self.event_wakeups = 0
+        self.timeout_wakeups = 0
+
+    def notify(self, *_args) -> None:
+        """Signal work. Extra args ignored so the same bound method serves
+        as a queue listener (no args) and an epoch done-callback (handle)."""
+        self.notified += 1
+        self._event.set()
+
+    def wait(self, timeout: float) -> bool:
+        """Block until notified (True) or ``timeout`` elapses (False);
+        consumes the notification."""
+        woke = self._event.wait(timeout)
+        if woke:
+            self._event.clear()
+            self.event_wakeups += 1
+        else:
+            self.timeout_wakeups += 1
+        return woke
+
+    def consume(self) -> bool:
+        """Non-blocking: consume a pending notification if present. The
+        injected-sleep (virtual-clock) drain path uses this so event
+        arrival short-circuits the virtual sleep deterministically."""
+        if self._event.is_set():
+            self._event.clear()
+            self.event_wakeups += 1
+            return True
+        return False
+
+    def stats(self) -> Dict[str, float]:
+        return {"notified": float(self.notified),
+                "event_wakeups": float(self.event_wakeups),
+                "timeout_wakeups": float(self.timeout_wakeups)}
+
+
 @dataclass
 class _InflightBatch:
     jobs: List[Job]
@@ -152,7 +208,9 @@ class JobService:
                  straggler: Optional["StragglerDetector"] = None,
                  accountant=None, max_deferred: int = 10_000,
                  telemetry=None, express: bool = True,
-                 express_slots: int = 1, clock=None, sleep=None):
+                 express_slots: int = 1, clock=None, sleep=None,
+                 fallback_s: float = 2.0,
+                 health_poll_s: Optional[float] = None):
         self.make_scheduler = make_scheduler
         # monotonic clock / sleep seams for the deterministic test
         # harness; the ctor arg shadows the module global, hence the
@@ -168,6 +226,23 @@ class JobService:
         self.journal = journal
         self.batch_jobs = max(1, batch_jobs)
         self.poll_s = poll_s
+        # event-driven drain: the loop parks on ``wakeup`` and is woken
+        # by queue arrivals, epoch completions, and submit/stop;
+        # ``fallback_s`` is the liveness backstop (large — events are the
+        # primary mechanism), tightened to ``health_poll_s`` when a
+        # watchdog/straggler monitor is attached because hangs generate
+        # no events and must be caught by polling
+        self.fallback_s = fallback_s
+        self.health_poll_s = health_poll_s if health_poll_s is not None \
+            else max(poll_s, 0.1)
+        self.wakeup = DrainWakeup()
+        # with an injected sleep (virtual-clock harness) the drain stays
+        # on the deterministic sleep path: virtual-time advance IS the
+        # wakeup, a real Event.wait would deadlock run_until_idle
+        self._injected_sleep = sleep is not None
+        add_listener = getattr(self.queue, "add_listener", None)
+        if add_listener is not None:
+            add_listener(self.wakeup.notify)
         self.watchdog = watchdog
         self.on_group_failed = on_group_failed
         self.pipeline_depth = max(1, pipeline_depth)
@@ -244,8 +319,12 @@ class JobService:
         if self.admission is None:
             self.queue.put(job)
             self._journal(job)
-            return AdmissionDecision(Decision.ADMIT, 0.0, float("inf"))
+            self.wakeup.notify()    # covers duck-typed queues without
+            return AdmissionDecision(   # arrival listeners
+                Decision.ADMIT, 0.0, float("inf"))
         dec = self.admission.admit(job)
+        if dec.decision == Decision.ADMIT:
+            self.wakeup.notify()
         if dec.decision == Decision.DEFER:
             with self._lock:
                 full = len(self._deferred) >= self.max_deferred
@@ -282,6 +361,8 @@ class JobService:
             else:
                 self._journal(job)
                 admitted += dec.decision == Decision.ADMIT
+        if admitted:
+            self.wakeup.notify()
         return admitted
 
     # -- replay-driven restart -----------------------------------------
@@ -440,6 +521,11 @@ class JobService:
             ib.handle = sched.submit_epoch(IterationSpace(0, total),
                                            priority=tier,
                                            deadline_s=deadline_mono)
+            # completion wakes the drain (frees a pipeline slot / lets a
+            # finalized batch's backlog re-gate deferred jobs)
+            add_cb = getattr(ib.handle, "add_done_callback", None)
+            if add_cb is not None:
+                add_cb(self.wakeup.notify)
             if self.telemetry is not None:
                 # register the batch's tenant composition against the
                 # epoch index BEFORE any chunk completes, so chunk spans
@@ -669,14 +755,14 @@ class JobService:
         while self.clock() < deadline:
             self.retry_deferred()
             self._poll_health()
-            progressed = self._pump(block_s=self.poll_s)
-            if progressed or self._inflight:
+            if self._pump(block_s=0.0):
                 continue
-            with self._lock:
-                idle = not self._deferred
-            if idle and self.queue.depth() == 0:
-                return True
-            self._sleep(self.poll_s)
+            if not self._inflight:
+                with self._lock:
+                    idle = not self._deferred
+                if idle and self.queue.depth() == 0:
+                    return True
+            self._wait_for_work(limit=deadline - self.clock())
         return False
 
     # -- daemon mode ---------------------------------------------------
@@ -690,6 +776,7 @@ class JobService:
 
     def stop(self, join: bool = True) -> None:
         self._stop.set()
+        self.wakeup.notify()        # unpark the drain immediately
         if join and self._thread is not None:
             self._thread.join(timeout=10.0)
         self._thread = None
@@ -707,12 +794,54 @@ class JobService:
             self._sched.shutdown()
             self._sched = None
 
+    def _next_deadline_delay(self) -> Optional[float]:
+        """Seconds until the earliest in-flight batch deadline (service
+        clock), or None — bounds the drain's park time so deadline
+        enforcement never waits on an unrelated event."""
+        best: Optional[float] = None
+        if self._inflight:
+            now = self.clock()
+            for ib in self._inflight:
+                if ib.deadline_mono is None:
+                    continue
+                d = ib.deadline_mono - now
+                if best is None or d < best:
+                    best = d
+        return best
+
+    def _wait_for_work(self, limit: Optional[float] = None) -> None:
+        """Park the drain until new work can arrive: a wakeup event
+        (arrival/completion/submit/stop) or a fallback timeout. The
+        timeout is ``fallback_s`` tightened by the health-poll cadence
+        (watchdog/straggler attached — hangs emit no events), the nearest
+        in-flight deadline, and the caller's ``limit``."""
+        timeout = self.fallback_s
+        if self.watchdog is not None or self.straggler is not None:
+            timeout = min(timeout, self.health_poll_s)
+        d = self._next_deadline_delay()
+        if d is not None:
+            timeout = min(timeout, max(d, 1e-4))
+        if limit is not None:
+            timeout = min(timeout, max(limit, 0.0))
+        if self._injected_sleep:
+            # deterministic harness: consuming a pending event replaces
+            # the virtual sleep; otherwise advance virtual time one poll
+            if not self.wakeup.consume():
+                self._sleep(self.poll_s)
+                self.wakeup.consume()
+            return
+        woke = self.wakeup.wait(timeout)
+        if self.telemetry is not None:
+            self._counter("svc.drain_wakeups",
+                          cause="event" if woke else "timeout").add(1)
+
     def _loop(self) -> None:
         while not self._stop.is_set():
             self.retry_deferred()
             self._poll_health()
-            if not self._pump(block_s=self.poll_s) and not self._inflight:
-                self._sleep(self.poll_s)
+            if self._pump(block_s=0.0):
+                continue
+            self._wait_for_work()
 
 
 class _DoneHandle:

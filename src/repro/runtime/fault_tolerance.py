@@ -27,30 +27,33 @@ class GroupHealth:
 class Watchdog:
     def __init__(self, tracker: ThroughputTracker,
                  timeout_factor: float = 5.0, min_timeout_s: float = 2.0,
-                 on_dead: Optional[Callable[[str], None]] = None):
+                 on_dead: Optional[Callable[[str], None]] = None,
+                 clock=None):
         self.tracker = tracker
         self.timeout_factor = timeout_factor
         self.min_timeout_s = min_timeout_s
         self.on_dead = on_dead
+        # injectable monotonic clock (tests/clock.py VirtualClock)
+        self.clock = clock if clock is not None else time.monotonic
         self._health: Dict[str, GroupHealth] = {}
         self._lock = threading.Lock()
 
     def chunk_started(self, group: str, expected_items: float):
         lam = self.tracker.get(group)
         with self._lock:
-            h = self._health.setdefault(group, GroupHealth(time.monotonic()))
-            h.outstanding_since = time.monotonic()
+            h = self._health.setdefault(group, GroupHealth(self.clock()))
+            h.outstanding_since = self.clock()
             h.expected_s = expected_items / max(lam, 1e-9)
 
     def chunk_finished(self, group: str):
         with self._lock:
-            h = self._health.setdefault(group, GroupHealth(time.monotonic()))
-            h.last_heartbeat = time.monotonic()
+            h = self._health.setdefault(group, GroupHealth(self.clock()))
+            h.last_heartbeat = self.clock()
             h.outstanding_since = None
 
     def check(self) -> List[str]:
         """Returns groups newly declared dead."""
-        now = time.monotonic()
+        now = self.clock()
         newly = []
         with self._lock:
             for g, h in self._health.items():

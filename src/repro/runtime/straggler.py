@@ -9,10 +9,12 @@ slower than a BIG group) is not misread as straggling.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
 from repro.core.throughput import ThroughputTracker
+from repro.policy.window import SlidingWindow
 
 
 @dataclass
@@ -27,12 +29,35 @@ class StragglerReport:
 
 
 class StragglerDetector:
+    """Reports groups whose current λ fell below ``threshold`` × their
+    healthy baseline.
+
+    ``window_s=None`` (default) keeps the original running-max baseline:
+    a group's best-ever λ, never forgotten. With a window, the baseline
+    is the max λ observed within the last ``window_s`` seconds
+    (``repro.policy.SlidingWindow``), so a *persistent* slowdown becomes
+    the new normal after one horizon and the group stops being reported
+    — derates decay instead of pinning a permanently-derated group to a
+    stale best-case baseline."""
+
     def __init__(self, tracker: ThroughputTracker,
-                 threshold: float = 0.5, warmup_chunks: int = 3):
+                 threshold: float = 0.5, warmup_chunks: int = 3,
+                 window_s: Optional[float] = None, clock=None):
         self.tracker = tracker
         self.threshold = threshold
         self.warmup = warmup_chunks
+        self.window_s = window_s
+        self.clock = clock if clock is not None else time.monotonic
         self._baseline: Dict[str, float] = {}
+        self._windows: Dict[str, SlidingWindow] = {}
+
+    def _windowed_baseline(self, g: str, lam: float) -> float:
+        w = self._windows.get(g)
+        if w is None:
+            w = self._windows[g] = SlidingWindow(self.window_s)
+        now = self.clock()
+        w.observe(now, lam)
+        return w.max(now)
 
     def observe(self) -> List[StragglerReport]:
         out = []
@@ -40,9 +65,12 @@ class StragglerDetector:
             st = self.tracker.stats(g)
             if st is None or st.n < self.warmup:
                 continue
-            base = self._baseline.get(g)
-            if base is None or lam > base:
-                self._baseline[g] = base = lam
+            if self.window_s is not None:
+                base = self._windowed_baseline(g, lam)
+            else:
+                base = self._baseline.get(g)
+                if base is None or lam > base:
+                    self._baseline[g] = base = lam
             if lam < self.threshold * base:
                 out.append(StragglerReport(g, lam, base))
         return out

@@ -73,7 +73,7 @@ class HeteroServeEngine:
                  prompt_len: int = 32, decode_tokens: int = 8,
                  max_len: Optional[int] = None, seed: int = 0,
                  alpha: float = 0.5, chunk_mode: str = "range",
-                 telemetry=None):
+                 telemetry=None, adaptive_refill: bool = True):
         self.cfg = cfg
         self.groups = groups
         self.prompt_len = prompt_len
@@ -81,6 +81,9 @@ class HeteroServeEngine:
         self.max_len = max_len or bucket(prompt_len + decode_tokens)
         self.seed = seed
         self.alpha = alpha
+        # history-driven refill sizing in the partitioner (steal-rate
+        # feedback; see HeterogeneousPartitioner._refill_quota_locked)
+        self.adaptive_refill = adaptive_refill
         # "range": zero-contention dispatch (private λ-share ranges with
         # work stealing); "paper": the lock-per-token baseline
         self.chunk_mode = chunk_mode
@@ -193,6 +196,7 @@ class HeteroServeEngine:
             raise RuntimeError("no live device groups")
         return DynamicScheduler(specs, execs, alpha=self.alpha,
                                 chunk_mode=self.chunk_mode,
+                                adaptive_refill=self.adaptive_refill,
                                 telemetry=self._tel_arg())
 
     def _tel_arg(self):
@@ -232,7 +236,8 @@ class HeteroServeEngine:
                    persistent: bool = True,
                    tenants: Optional[TenantRegistry] = None,
                    energy_model: Optional[EnergyModel] = None,
-                   express: bool = True) \
+                   express: bool = True,
+                   policy=None, idle_s: float = 0.0) \
             -> QueueServeReport:
         """Serve prioritized jobs through admission control + queue.
 
@@ -261,6 +266,12 @@ class HeteroServeEngine:
         batches run at the tier of their most urgent member, and jobs
         with ``deadline_s`` are shed at pop or cooperatively cancelled in
         flight once the budget is spent.
+
+        ``policy`` (repro.policy.AdaptivePolicy) smooths admission over a
+        sliding window and cools down straggler rebalances. ``idle_s > 0``
+        keeps the drain daemon parked for that long after the queue
+        drains — the idle-efficiency probe scripts/smoke.sh uses to
+        assert the event-driven drain isn't busy-polling.
         """
         tracker = ThroughputTracker(self.alpha)
         ledger = OverheadLedger()
@@ -293,7 +304,8 @@ class HeteroServeEngine:
                 queue, tracker, ledger,
                 slo_delay_s=slo_delay_s if slo_delay_s is not None
                 else float("inf"),
-                registry=tenants, telemetry=self._tel_arg())
+                registry=tenants, telemetry=self._tel_arg(),
+                policy=policy)
             for g in self.groups:
                 admission.on_group_join(g.name, 1.0)
         journal = JournalStore(journal_path) if journal_path else None
@@ -311,6 +323,12 @@ class HeteroServeEngine:
             service.submit(job)
         drained = service.run_until_idle(timeout_s=timeout_s)
         dt = time.monotonic() - t0
+        if idle_s > 0.0:
+            # park the daemon on an empty queue: with the event-driven
+            # drain it should accrue only fallback-timeout wakeups, at
+            # ≤ 1/fallback_s per second (vs. 1/poll_s busy-polling)
+            service.start()
+            time.sleep(idle_s)
         service.close()
         if journal is not None:
             journal.close()

@@ -73,6 +73,9 @@ class ShardedQueueManager:
         self._derate: Dict[str, float] = {}      # energy-budget factors
         self._lock = threading.RLock()
         self._not_empty = threading.Condition(self._lock)
+        # arrival listeners (JobService drain wakeup) — fired after
+        # put/requeue, outside the manager lock; see QueueManager
+        self._listeners: List = []
         # metrics: DWRR pick counters per tenant on the drain path, plus a
         # collector publishing per-tenant depth/backlog gauges at snapshot
         # time (pull, not push — depth reads never ride the hot path)
@@ -153,10 +156,22 @@ class ShardedQueueManager:
             return list(self._order)
 
     # -- admission side -------------------------------------------------
+    def add_listener(self, fn) -> None:
+        """Register ``fn()`` to run after each job arrival (put/requeue)."""
+        with self._lock:
+            self._listeners.append(fn)
+
+    def _notify_listeners(self) -> None:
+        with self._lock:
+            listeners = list(self._listeners)
+        for fn in listeners:
+            fn()
+
     def put(self, job: Job) -> None:
         with self._not_empty:
             self._shard(job.tenant).put(job)
             self._not_empty.notify()
+        self._notify_listeners()
 
     def cancel(self, job_id: str) -> bool:
         with self._not_empty:
@@ -337,6 +352,7 @@ class ShardedQueueManager:
         with self._not_empty:
             self._shard(job.tenant).requeue(job)
             self._not_empty.notify()
+        self._notify_listeners()
 
     # -- introspection --------------------------------------------------
     def get(self, job_id: str) -> Optional[Job]:

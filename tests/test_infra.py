@@ -153,26 +153,27 @@ def _rec(group, size, t0, t1):
                        tg1=t0, tg5=t1, tc1=t0, tc2=t0, tc3=t1)
 
 
-def test_watchdog_flags_hung_group():
+def test_watchdog_flags_hung_group(vclock):
     tr = ThroughputTracker()
     tr.seed("g", 1000.0)
     dead = []
     wd = Watchdog(tr, timeout_factor=1.0, min_timeout_s=0.05,
-                  on_dead=dead.append)
+                  on_dead=dead.append, clock=vclock.now)
     wd.chunk_started("g", expected_items=10)   # expected 0.01s
-    time.sleep(0.12)
+    vclock.advance(0.12)
     assert wd.check() == ["g"]
     assert dead == ["g"]
     assert wd.check() == []                    # only reported once
 
 
-def test_watchdog_heartbeat_clears():
+def test_watchdog_heartbeat_clears(vclock):
     tr = ThroughputTracker()
     tr.seed("g", 1000.0)
-    wd = Watchdog(tr, timeout_factor=1.0, min_timeout_s=0.05)
+    wd = Watchdog(tr, timeout_factor=1.0, min_timeout_s=0.05,
+                  clock=vclock.now)
     wd.chunk_started("g", 10)
     wd.chunk_finished("g")
-    time.sleep(0.12)
+    vclock.advance(0.12)
     assert wd.check() == []
 
 

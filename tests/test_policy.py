@@ -1,0 +1,581 @@
+"""Adaptive-policy layer: sliding-window stats, spike/cooldown decisions,
+sharded λ-tracker equivalence, adaptive refill sizing, event-driven drain.
+
+Deterministic + seeded-random coverage that always runs; the Hypothesis
+property-test mirror lives in tests/test_policy_properties.py (skipped
+when hypothesis is absent, per repo convention).
+"""
+import random
+import threading
+import time
+
+from repro.core import (Chunk, ChunkRecord, DeviceKind, GroupSpec,
+                        IterationSpace, LockedThroughputTracker,
+                        SleepExecutor, ThroughputTracker, Token)
+from repro.core.partitioner import HeterogeneousPartitioner
+from repro.core.scheduler import DynamicScheduler
+from repro.policy import AdaptivePolicy, SlidingWindow
+from repro.queue import Job, JobService
+from repro.queue.manager import QueueManager
+
+
+def _rec(group, size, t0, t1):
+    return ChunkRecord(Token(Chunk(0, size), group, DeviceKind.BIG),
+                       tg1=t0, tg5=t1, tc1=t0, tc2=t0, tc3=t1)
+
+
+# ---------------------------------------------------------------------------
+# SlidingWindow
+# ---------------------------------------------------------------------------
+
+def test_window_evicts_past_horizon():
+    w = SlidingWindow(horizon_s=1.0)
+    w.observe(0.0, 5.0)
+    w.observe(0.5, 7.0)
+    assert w.count == 2 and w.max() == 7.0 and w.min() == 5.0
+    w.observe(1.4, 3.0)                  # evicts the t=0.0 sample
+    assert w.count == 2
+    assert w.max() == 7.0 and w.min() == 3.0
+    assert w.max(now=2.0) == 3.0         # read-side eviction too
+
+
+def test_window_quantiles_bounded_and_ordered():
+    rng = random.Random(3)
+    w = SlidingWindow(horizon_s=100.0)
+    for i in range(200):
+        w.observe(float(i) * 0.01, rng.uniform(-5, 5))
+    qs = [w.quantile(q) for q in (0.0, 0.25, 0.5, 0.75, 0.99, 1.0)]
+    assert qs == sorted(qs)
+    assert qs[0] == w.min() and qs[-1] == w.max()
+    assert w.min() <= w.mean() <= w.max()
+    assert w.median() == w.quantile(0.5)
+
+
+def test_window_ewma_converges_to_constant():
+    w = SlidingWindow(horizon_s=10.0, alpha=0.3)
+    w.observe(0.0, 100.0)
+    for i in range(1, 60):
+        w.observe(i * 0.1, 2.0)
+    assert abs(w.ewma - 2.0) < 1e-6
+    assert w.last == 2.0
+
+
+def test_window_bounded_samples():
+    w = SlidingWindow(horizon_s=1e9, max_samples=16)
+    for i in range(100):
+        w.observe(float(i), float(i))
+    assert w.count == 16
+    assert w.min() == 84.0               # oldest evicted by cap
+
+
+def test_window_empty_reads():
+    w = SlidingWindow(horizon_s=1.0)
+    assert w.count == 0 and w.ewma == 0.0
+    assert w.mean() == w.min() == w.max() == w.quantile(0.5) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# AdaptivePolicy: admission smoothing + spikes
+# ---------------------------------------------------------------------------
+
+def test_admission_delay_rises_fast_decays_slow():
+    p = AdaptivePolicy(window_s=10.0, alpha=0.5, min_samples=2)
+    for i in range(5):
+        p.admission_delay(float(i), 1.0)
+    # spike: the point sample dominates immediately (trend projection
+    # may push the estimate even higher — never lower)
+    assert p.admission_delay(5.0, 50.0) >= 50.0
+    # after the burst, the smoothed view decays instead of snapping back
+    eased = p.admission_delay(6.0, 1.0)
+    assert 1.0 < eased < 50.0
+
+
+def test_spike_detection_counts_only_outliers():
+    p = AdaptivePolicy(window_s=100.0, spike_threshold=3.0, min_samples=3)
+    t = 0.0
+    for _ in range(10):
+        p.admission_delay(t, 1.0)
+        t += 0.1
+    assert p.spikes == 0
+    p.admission_delay(t, 10.0)           # 10× the median
+    assert p.spikes == 1
+    p.admission_delay(t + 0.1, 1.1)      # back to normal: no spike
+    assert p.spikes == 1
+
+
+def test_spike_needs_min_samples():
+    p = AdaptivePolicy(window_s=100.0, spike_threshold=2.0, min_samples=5)
+    p.admission_delay(0.0, 1.0)
+    p.admission_delay(0.1, 100.0)        # huge, but window too thin
+    assert p.spikes == 0
+
+
+def test_window_slope_tracks_trend():
+    w = SlidingWindow(horizon_s=10.0)
+    assert w.slope() == 0.0              # empty
+    w.observe(0.0, 1.0)
+    assert w.slope() == 0.0              # single sample
+    for i in range(1, 6):
+        w.observe(float(i), 1.0 + 2.0 * i)
+    assert abs(w.slope() - 2.0) < 1e-9   # exact on a clean ramp
+    w2 = SlidingWindow(horizon_s=10.0)
+    for i in range(6):
+        w2.observe(float(i), 7.0)
+    assert w2.slope() == 0.0             # flat
+    # eviction: only the windowed tail counts
+    w3 = SlidingWindow(horizon_s=2.0)
+    w3.observe(0.0, 100.0)               # stale outlier
+    w3.observe(10.0, 1.0)
+    w3.observe(11.0, 2.0)
+    assert abs(w3.slope(now=11.0) - 1.0) < 1e-9
+
+
+def test_trend_projection_defers_before_the_edge():
+    """A ramping backlog must cross the gate *early*: the projected
+    estimate exceeds the point sample by slope × lead_s."""
+    p = AdaptivePolicy(window_s=10.0, alpha=1.0, lead_s=0.5)
+    for i in range(5):
+        p.admission_delay(float(i) * 0.1, 0.1 + 0.1 * i)  # +1.0/s ramp
+    est = p.admission_delay(0.5, 0.6)
+    assert est > 0.6 + 0.25              # ≈ point + 1.0 × lead_s
+    # a falling trend must NOT discount below the point sample
+    p2 = AdaptivePolicy(window_s=10.0, alpha=1.0, lead_s=0.5)
+    for i in range(5):
+        p2.admission_delay(float(i) * 0.1, 1.0 - 0.1 * i)
+    assert p2.admission_delay(0.5, 0.5) >= 0.5
+
+
+def test_hysteresis_latches_defer_until_recovery():
+    """Once the estimate crosses the SLO the gate stays shut — even for
+    point samples back inside the band — until the windowed high-water
+    clears slo × (1 - hysteresis)."""
+    slo = 1.0
+    p = AdaptivePolicy(window_s=1.0, alpha=1.0, lead_s=0.0,
+                       hysteresis=0.1, recovery_q=1.0)
+    assert p.admission_delay(0.0, 0.5, slo=slo) <= slo
+    assert p.admission_delay(0.1, 1.2, slo=slo) > slo    # latches
+    # point back under the SLO, but the 1.2 sample is still in-window
+    held = p.admission_delay(0.2, 0.5, slo=slo)
+    assert held > slo
+    assert p.hysteresis_holds == 1
+    assert p.stats()["deferring"] == 1.0
+    # window drains past the horizon: recovery re-opens the gate
+    eased = p.admission_delay(2.0, 0.5, slo=slo)
+    assert eased <= slo
+    assert p.stats()["deferring"] == 0.0
+
+
+def test_no_latch_without_slo():
+    p = AdaptivePolicy(window_s=1.0, alpha=1.0, lead_s=0.0)
+    p.admission_delay(0.0, 5.0)
+    assert p.admission_delay(2.0, 0.5) == 0.5
+    assert p.stats()["deferring"] == 0.0
+
+
+def test_gate_keys_isolate_tenant_windows():
+    """A starved tenant's huge fair-share projections must not poison
+    another tenant's smoothed estimate (regression: one shared window
+    rejected a high-weight tenant's whole burst the moment a low-weight
+    tenant shared the gate)."""
+    p = AdaptivePolicy(window_s=10.0, alpha=1.0, lead_s=0.0)
+    for i in range(5):
+        p.admission_delay(float(i), 200.0, slo=5.0, key="free")
+    # gold's first sample sees a fresh window, not free's 200s EWMA
+    assert p.admission_delay(5.0, 0.5, slo=5.0, key="gold") == 0.5
+    assert p.stats()["delay_samples"] == 6.0
+
+
+def test_trend_needs_window_span():
+    """A submit burst lands many samples within ~0 time; a slope fit
+    over that span extrapolates far beyond its data, so the trend term
+    must stay off until the window covers at least lead_s."""
+    p = AdaptivePolicy(window_s=10.0, alpha=1.0, lead_s=0.5)
+    t = 0.0
+    for d in (0.1, 0.5, 1.0, 2.0, 4.0):     # steep ramp, microseconds apart
+        est = p.admission_delay(t, d)
+        assert est == d                       # no projection yet
+        t += 1e-6
+    # same ramp spread over real time: projection kicks in
+    p2 = AdaptivePolicy(window_s=10.0, alpha=1.0, lead_s=0.5)
+    t = 0.0
+    for d in (0.1, 0.5, 1.0, 2.0):
+        p2.admission_delay(t, d)
+        t += 0.25
+    assert p2.admission_delay(1.0, 4.0) > 4.0
+
+
+# ---------------------------------------------------------------------------
+# AdaptivePolicy: rebalance cooldown
+# ---------------------------------------------------------------------------
+
+def test_insignificant_rebalance_is_noop():
+    p = AdaptivePolicy(cooldown_s=1.0, rebalance_epsilon=0.05)
+    assert not p.allow_rebalance(0.0, {"g": 0.98}, {"g": 1.0})
+    assert p.rebalances == 0 and p.rebalances_suppressed == 0
+
+
+def test_first_significant_rebalance_applies_then_cooldown():
+    p = AdaptivePolicy(cooldown_s=1.0)
+    assert p.allow_rebalance(0.0, {"g": 0.5}, {})
+    assert p.rebalances == 1
+    # flap back within the cooldown: suppressed
+    assert not p.allow_rebalance(0.4, {"g": 1.0}, {"g": 0.5})
+    assert p.rebalances_suppressed == 1
+    # cooldown elapsed: applies
+    assert p.allow_rebalance(1.1, {"g": 1.0}, {"g": 0.5})
+    assert p.rebalances == 2
+
+
+def test_persistent_change_never_starved():
+    """A change that keeps being proposed lands within one cooldown."""
+    p = AdaptivePolicy(cooldown_s=1.0)
+    assert p.allow_rebalance(0.0, {"g": 0.5}, {})
+    t, applied = 0.1, None
+    while t < 5.0:
+        if p.allow_rebalance(t, {"g": 0.2}, {"g": 0.5}):
+            applied = t
+            break
+        t += 0.1
+    assert applied is not None and applied <= 1.0 + 0.1 + 1e-9
+
+
+def test_missing_groups_default_to_full_weight():
+    p = AdaptivePolicy(rebalance_epsilon=0.05)
+    # {"g": 1.0} vs {} is no change at all
+    assert not p.significant({"g": 1.0}, {})
+    assert p.significant({}, {"g": 0.5})     # recovery IS a change
+
+
+# ---------------------------------------------------------------------------
+# Sharded tracker ≡ locked tracker
+# ---------------------------------------------------------------------------
+
+def _feed(tracker, group, lams, t0=0.0):
+    t = t0
+    for lam in lams:
+        size = 8
+        dt = size / lam
+        tracker.update(_rec(group, size, t, t + dt))
+        t += dt
+
+
+def test_sharded_matches_locked_single_writer_per_group():
+    """The scheduler invariant: each group fed by one thread. Merged
+    stats must be bit-identical to the single-lock oracle for any alpha."""
+    rng = random.Random(11)
+    groups = {f"g{i}": [rng.uniform(1.0, 500.0) for _ in range(40)]
+              for i in range(4)}
+    for alpha in (1.0, 0.5, 0.3):
+        shard = ThroughputTracker(alpha)
+        oracle = LockedThroughputTracker(alpha)
+        for g, lams in groups.items():
+            _feed(oracle, g, lams)
+        threads = [threading.Thread(target=_feed, args=(shard, g, lams))
+                   for g, lams in groups.items()]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        for g in groups:
+            a, b = shard.stats(g), oracle.stats(g)
+            assert a.n == b.n
+            assert a.total_items == b.total_items
+            assert abs(a.total_time - b.total_time) < 1e-12
+            assert abs(a.ewma - b.ewma) < 1e-9
+            assert a.last == b.last
+            assert abs(shard.get(g) - oracle.get(g)) < 1e-9
+        assert set(shard.snapshot()) == set(oracle.snapshot())
+
+
+def test_sharded_update_many_matches_locked_mixed_batches():
+    rng = random.Random(7)
+    recs = []
+    t = 0.0
+    for i in range(200):
+        g = f"g{rng.randrange(3)}"
+        size = rng.randrange(1, 64)
+        dt = rng.uniform(1e-4, 1e-2)
+        recs.append(_rec(g, size, t, t + dt))
+        t += dt
+    for alpha in (1.0, 0.4):
+        shard, oracle = ThroughputTracker(alpha), \
+            LockedThroughputTracker(alpha)
+        # single thread: update_many must equal record-at-a-time oracle
+        shard.update_many(recs)
+        for r in recs:
+            oracle.update(r)
+        for g in ("g0", "g1", "g2"):
+            a, b = shard.stats(g), oracle.stats(g)
+            assert (a.n, a.total_items) == (b.n, b.total_items)
+            assert abs(a.ewma - b.ewma) < 1e-9
+            assert a.last == b.last
+
+
+def test_sharded_alpha1_multiwriter_conserves_counts():
+    """alpha=1.0 (paper mode), many writers on ONE group: totals are
+    conserved exactly and the merged ewma/last is some thread's real
+    observation (merge-by-latest-seq; no invariant on which)."""
+    shard = ThroughputTracker(1.0)
+    lams_by_thread = [[float(100 + t * 17 + i) for i in range(50)]
+                      for t in range(6)]
+    threads = [threading.Thread(target=_feed, args=(shard, "g", lams))
+               for lams in lams_by_thread]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    st = shard.stats("g")
+    assert st.n == 6 * 50
+    assert st.total_items == 6 * 50 * 8
+    everything = {lam for lams in lams_by_thread for lam in lams}
+    assert any(abs(st.ewma - lam) < 1e-6 for lam in everything)
+    assert any(abs(st.last - lam) < 1e-6 for lam in everything)
+
+
+def test_sharded_ewma_chain_survives_writer_handoff():
+    """A group whose writer thread changes seeds the new cell's EWMA from
+    the merged view — continuous, not restarted."""
+    shard = ThroughputTracker(0.5)
+    oracle = LockedThroughputTracker(0.5)
+    first, second = [100.0, 200.0], [50.0, 25.0]
+    th = threading.Thread(target=_feed, args=(shard, "g", first))
+    th.start(), th.join()
+    th2 = threading.Thread(target=_feed, args=(shard, "g", second, 100.0))
+    th2.start(), th2.join()
+    _feed(oracle, "g", first)
+    _feed(oracle, "g", second, 100.0)
+    assert abs(shard.stats("g").ewma - oracle.stats("g").ewma) < 1e-9
+
+
+def test_sharded_registration_lock_untouched_steady_state():
+    tr = ThroughputTracker(1.0)
+    _feed(tr, "g", [10.0] * 5)
+    before = tr.contention_stats()["lock_acquires"]
+    _feed(tr, "g", [10.0] * 100, t0=100.0)   # same thread: no registration
+    assert tr.contention_stats()["lock_acquires"] == before
+
+
+# ---------------------------------------------------------------------------
+# Adaptive refill sizing
+# ---------------------------------------------------------------------------
+
+def _part(adaptive, n=10_000, refill=8, warm=False):
+    tr = ThroughputTracker(1.0)
+    groups = {"a": GroupSpec("a", DeviceKind.BIG, init_throughput=1e6),
+              "b": GroupSpec("b", DeviceKind.LITTLE, init_throughput=1.0)}
+    part = HeterogeneousPartitioner(IterationSpace(0, n), groups, tr,
+                                    base_quantum=64, refill_chunks=refill,
+                                    adaptive_refill=adaptive)
+    if warm:
+        # one measurement per group at its seed λ: activates λ-share
+        # refills (cold groups refill a single chunk)
+        for g in groups.values():
+            tr.update(_rec(g.name, 1000, 0.0, 1000 / g.init_throughput))
+    return part
+
+
+def test_refill_quota_static_without_flag():
+    p = _part(adaptive=False)
+    p._steals, p._refills = 100, 1
+    assert p._refill_quota_locked() == 8
+
+
+def test_refill_quota_shrinks_on_heavy_stealing():
+    p = _part(adaptive=True)
+    p._refills, p._steals = 4, 4          # steal rate 0.5 ≥ high
+    assert p._refill_quota_locked() == 4
+    assert p.refill_stats()["refill_quota"] == 4.0
+
+
+def test_refill_quota_grows_when_steals_rare():
+    p = _part(adaptive=True)
+    p._refills, p._steals = 100, 2        # rate ~0.02 ≤ low
+    assert p._refill_quota_locked() == 16
+
+
+def test_refill_quota_needs_history():
+    p = _part(adaptive=True)
+    p._refills, p._steals = 2, 2          # only 4 events < min_total
+    assert p._refill_quota_locked() == 8
+
+
+def test_adaptive_near_exhaustion_caps_hoarding():
+    """With heavy stealing history and a nearly-drained space, a fast
+    group's λ-share refill is capped instead of hoarding the tail."""
+    p = _part(adaptive=True, n=400, warm=True)
+    p._refills, p._steals = 4, 8          # steal rate 2/3: quota → 4
+    tok = p.next_token("a")               # λ-share want would be ~400
+    assert tok is not None
+    # tail (400) ≤ quota(4)×chunk(64)×2 groups → capped at tail/2 = 200
+    assert p.space.remaining >= 150
+
+
+def test_static_partitioner_keeps_hoarding_behavior():
+    """Same near-exhausted setup WITHOUT the flag: the fast group's
+    λ-share refill takes (almost) the whole space — PR 5 behavior."""
+    p = _part(adaptive=False, n=400, warm=True)
+    p._refills, p._steals = 4, 8
+    assert p.next_token("a") is not None
+    assert p.space.remaining <= 1
+
+
+def test_scheduler_runs_with_adaptive_refill_both_modes():
+    for adaptive in (True, False):
+        specs = {g: GroupSpec(g, DeviceKind.BIG) for g in ("x", "y")}
+        execs = {g: SleepExecutor(rate=100_000.0) for g in specs}
+        sched = DynamicScheduler(specs, execs, chunk_mode="range",
+                                 adaptive_refill=adaptive)
+        res = sched.run(0, 2048)
+        sched.shutdown()
+        assert res.iterations == 2048
+        assert sum(res.per_group_items.values()) == 2048
+
+
+# ---------------------------------------------------------------------------
+# Event-driven drain
+# ---------------------------------------------------------------------------
+
+def _make_service(**kw):
+    specs = {"g": GroupSpec("g", DeviceKind.BIG)}
+
+    def make():
+        return DynamicScheduler(
+            specs, {"g": SleepExecutor(rate=100_000.0)})
+
+    return JobService(make, queue=QueueManager(), **kw)
+
+
+def test_submit_wakes_parked_daemon_quickly():
+    svc = _make_service(poll_s=0.01, fallback_s=30.0)
+    svc.start()
+    try:
+        time.sleep(0.05)                  # daemon parks on the event
+        t0 = time.monotonic()
+        svc.submit(Job(items=64))
+        deadline = time.monotonic() + 5.0
+        while svc.stats.done == 0 and time.monotonic() < deadline:
+            time.sleep(0.002)
+        latency = time.monotonic() - t0
+        # fallback is 30s: completing this fast proves the event woke it
+        assert svc.stats.done == 1
+        assert latency < 5.0
+        assert svc.wakeup.event_wakeups >= 1
+    finally:
+        svc.close()
+
+
+def test_idle_daemon_accrues_only_fallback_timeouts():
+    svc = _make_service(poll_s=0.01, fallback_s=0.05)
+    svc.start()
+    try:
+        time.sleep(0.4)
+        stats = svc.wakeup.stats()
+        # ≈ 0.4/0.05 = 8 expected; generous ceiling, but far below the
+        # 40 a poll_s busy-loop would log
+        assert stats["timeout_wakeups"] <= 20
+    finally:
+        svc.close()
+
+
+def test_queue_listener_fires_on_put_and_requeue():
+    q = QueueManager()
+    hits = []
+    q.add_listener(lambda: hits.append(1))
+    q.put(Job(items=1))
+    assert len(hits) == 1
+
+
+def test_epoch_done_callback_fires():
+    specs = {"g": GroupSpec("g", DeviceKind.BIG)}
+    sched = DynamicScheduler(specs, {"g": SleepExecutor(rate=100_000.0)})
+    sched.start()
+    try:
+        fired = threading.Event()
+        h = sched.submit_epoch((0, 256))
+        h.add_done_callback(lambda _h: fired.set())
+        assert h.wait(10.0)
+        assert fired.wait(5.0)
+        # late registration on a finalized handle: immediate callback
+        late = threading.Event()
+        h.add_done_callback(lambda _h: late.set())
+        assert late.is_set()
+    finally:
+        sched.shutdown()
+
+
+def test_stop_unparks_daemon_immediately():
+    svc = _make_service(poll_s=0.01, fallback_s=60.0)
+    svc.start()
+    time.sleep(0.05)
+    t0 = time.monotonic()
+    svc.stop()
+    assert time.monotonic() - t0 < 5.0    # did not wait out fallback_s
+
+
+# ---------------------------------------------------------------------------
+# Idle probing (stale-capacity livelock)
+# ---------------------------------------------------------------------------
+
+def _stale_capacity_controller(policy, slo=1.0, registry=None, queue=None):
+    from repro.queue.admission import AdmissionController
+    q = queue if queue is not None else QueueManager()
+    adm = AdmissionController(q, slo_delay_s=slo, defer_factor=4.0,
+                              registry=registry, policy=policy)
+    # measured-stale capacity: 0.1 items/s makes even a 2-item job
+    # project 20s — far past the reject band for a 1s SLO
+    adm.on_group_join("g0", 0.1)
+    return q, adm
+
+
+def test_idle_probe_breaks_stale_capacity_livelock():
+    from repro.queue.admission import Decision
+    q, adm = _stale_capacity_controller(AdaptivePolicy(window_s=5.0))
+    first = adm.admit(Job(items=2))
+    # idle population: the 20s projection is unfalsifiable; probe admits
+    assert first.decision == Decision.ADMIT
+    assert first.reason == "idle probe"
+    assert adm.idle_probes == 1
+    # the probe is now unfinished work: the next candidate gates normally
+    second = adm.admit(Job(items=2))
+    assert second.decision != Decision.ADMIT
+    assert adm.idle_probes == 1
+
+
+def test_no_idle_probe_without_policy():
+    from repro.queue.admission import Decision
+    q, adm = _stale_capacity_controller(policy=None)
+    assert adm.admit(Job(items=2)).decision == Decision.REJECT
+    assert adm.idle_probes == 0
+
+
+def test_idle_probe_waits_for_popped_work():
+    from repro.queue.admission import Decision
+    from repro.queue.job import JobState
+    q, adm = _stale_capacity_controller(AdaptivePolicy(window_s=5.0))
+    probe = adm.admit(Job(items=2))
+    assert probe.decision == Decision.ADMIT
+    popped = q.pop()                     # backlog 0, but ADMITTED in flight
+    assert popped is not None
+    assert adm.admit(Job(items=2)).decision != Decision.ADMIT
+    q.mark_running(popped)               # RUNNING still blocks probing
+    assert adm.admit(Job(items=2)).decision != Decision.ADMIT
+    q.mark_finished(popped, JobState.DONE)
+    nxt = adm.admit(Job(items=2))        # idle again: probe resumes
+    assert nxt.decision == Decision.ADMIT and nxt.reason == "idle probe"
+
+
+def test_idle_probe_is_per_tenant():
+    from repro.queue.admission import Decision
+    from repro.tenancy import ShardedQueueManager, TenantRegistry
+    reg = TenantRegistry.parse("gold:weight=10,free:weight=1")
+    q = ShardedQueueManager(reg)
+    _, adm = _stale_capacity_controller(
+        AdaptivePolicy(window_s=5.0), registry=reg, queue=q)
+    gold = adm.admit(Job(items=2, tenant="gold"))
+    assert gold.decision == Decision.ADMIT and gold.reason == "idle probe"
+    # gold's probe occupies gold's shard only: free still probes
+    free = adm.admit(Job(items=2, tenant="free"))
+    assert free.decision == Decision.ADMIT and free.reason == "idle probe"
+    # but a second gold candidate sees gold's unfinished probe
+    assert adm.admit(Job(items=2, tenant="gold")).decision != Decision.ADMIT
+    assert adm.idle_probes == 2

@@ -1,0 +1,147 @@
+"""Hypothesis property tests for the adaptive-policy layer.
+
+Mirrors tests/test_policy.py with generated inputs:
+- sharded λ-tracker merged stats ≡ single-lock oracle for any per-group
+  record sequence split across writer threads (the scheduler's
+  single-writer-per-group invariant);
+- sliding-window invariants: quantiles bounded by windowed min/max and
+  monotone in q; EWMA converges to a constant tail;
+- rebalance cooldown never starves a persistently-proposed change.
+
+Skipped wholesale when hypothesis is not installed (repo convention —
+see tests/test_properties.py).
+"""
+import threading
+
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Chunk, ChunkRecord, DeviceKind,
+                        LockedThroughputTracker, ThroughputTracker, Token)
+from repro.policy import AdaptivePolicy, SlidingWindow
+
+
+def _rec(group, size, t0, t1):
+    return ChunkRecord(Token(Chunk(0, size), group, DeviceKind.BIG),
+                       tg1=t0, tg5=t1, tc1=t0, tc2=t0, tc3=t1)
+
+
+def _feed(tracker, group, lams):
+    t = 0.0
+    for lam in lams:
+        dt = 8 / lam
+        tracker.update(_rec(group, 8, t, t + dt))
+        t += dt
+
+
+lam_seqs = st.lists(st.floats(0.5, 1e4, allow_nan=False), min_size=1,
+                    max_size=30)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    per_group=st.dictionaries(
+        st.sampled_from(["g0", "g1", "g2", "g3"]), lam_seqs,
+        min_size=1, max_size=4),
+    alpha=st.sampled_from([1.0, 0.7, 0.3]),
+)
+def test_sharded_tracker_equiv_locked_any_single_writer_interleaving(
+        per_group, alpha):
+    shard, oracle = ThroughputTracker(alpha), \
+        LockedThroughputTracker(alpha)
+    for g, lams in per_group.items():
+        _feed(oracle, g, lams)
+    threads = [threading.Thread(target=_feed, args=(shard, g, lams))
+               for g, lams in per_group.items()]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    for g in per_group:
+        a, b = shard.stats(g), oracle.stats(g)
+        assert a.n == b.n
+        assert a.total_items == b.total_items
+        assert abs(a.total_time - b.total_time) <= 1e-9 * max(
+            1.0, b.total_time)
+        assert abs(a.ewma - b.ewma) <= 1e-6 * max(1.0, abs(b.ewma))
+        assert a.last == b.last
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    samples=st.lists(
+        st.tuples(st.floats(0.0, 100.0, allow_nan=False),
+                  st.floats(-1e6, 1e6, allow_nan=False)),
+        min_size=1, max_size=60),
+    horizon=st.floats(0.1, 50.0, allow_nan=False),
+    q=st.floats(0.0, 1.0, allow_nan=False),
+)
+def test_window_quantile_bounded_by_extremes(samples, horizon, q):
+    w = SlidingWindow(horizon_s=horizon)
+    for t, v in sorted(samples):
+        w.observe(t, v)
+    if w.count:
+        assert w.min() <= w.quantile(q) <= w.max()
+        assert w.min() <= w.mean() <= w.max()
+        qs = [w.quantile(x / 10.0) for x in range(11)]
+        assert qs == sorted(qs)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    head=st.lists(st.floats(-1e3, 1e3, allow_nan=False), max_size=20),
+    target=st.floats(-100.0, 100.0, allow_nan=False),
+    alpha=st.floats(0.05, 1.0, allow_nan=False),
+)
+def test_window_ewma_converges_to_constant_tail(head, target, alpha):
+    w = SlidingWindow(horizon_s=1e9, alpha=alpha)
+    t = 0.0
+    for v in head:
+        w.observe(t, v)
+        t += 1.0
+    for _ in range(400):
+        w.observe(t, target)
+        t += 1.0
+    assert abs(w.ewma - target) <= 1e-3 * max(1.0, abs(target)) + 1e-6
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    points=st.lists(st.floats(0.0, 2.0, allow_nan=False), min_size=1,
+                    max_size=50),
+    slo=st.floats(0.1, 1.5, allow_nan=False),
+)
+def test_admission_estimate_latch_consistency(points, slo):
+    """Two gate invariants for any sample sequence: the smoothed
+    estimate never discounts the point sample, and the latch state
+    after a call is exactly (estimate > slo)."""
+    p = AdaptivePolicy(window_s=1.0, alpha=0.5, hysteresis=0.1,
+                       recovery_q=0.9)
+    t = 0.0
+    for v in points:
+        est = p.admission_delay(t, v, slo=slo)
+        assert est >= v
+        assert (est > slo) == bool(p.stats()["deferring"])
+        t += 0.05
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    cooldown=st.floats(0.0, 5.0, allow_nan=False),
+    tick=st.floats(0.01, 1.0, allow_nan=False),
+    first_at=st.floats(0.0, 3.0, allow_nan=False),
+)
+def test_cooldown_never_starves_persistent_change(cooldown, tick,
+                                                  first_at):
+    p = AdaptivePolicy(cooldown_s=cooldown)
+    assert p.allow_rebalance(first_at, {"g": 0.5}, {})
+    t, applied = first_at + tick, None
+    while t < first_at + cooldown + 2 * tick + 1e-9:
+        if p.allow_rebalance(t, {"g": 0.2}, {"g": 0.5}):
+            applied = t
+            break
+        t += tick
+    assert applied is not None
+    assert applied <= first_at + cooldown + tick + 1e-6

@@ -256,7 +256,12 @@ def test_exporter_writes_jsonl_prom_and_trace(tmp_path):
     exp = MetricsExporter(tel, metrics_path=metrics, interval_s=0.02,
                           trace_path=trace, prometheus_path=prom)
     with exp:
-        time.sleep(0.1)
+        # condition-based liveness wait (no fixed sleep): hold the
+        # exporter open until it has written at least two periodic
+        # snapshots, bounded so a dead exporter fails fast
+        deadline = time.monotonic() + 5.0
+        while exp.snapshots_written < 2 and time.monotonic() < deadline:
+            time.sleep(0.005)
     snaps = read_jsonl(metrics)
     assert len(snaps) >= 2                       # periodic + final
     assert snaps[-1]["final"] is True

@@ -242,13 +242,15 @@ def test_quota_blocked_pop_wakes_on_mark_finished():
     q.put(Job(items=1, tenant="capped"))
     first = q.pop()
     got = []
+    started = threading.Event()
 
     def blocked_pop():
+        started.set()
         got.append(q.pop(timeout=5.0))
 
     th = threading.Thread(target=blocked_pop)
     th.start()
-    time.sleep(0.05)
+    assert started.wait(5.0)
     q.mark_running(first)
     q.mark_finished(first, JobState.DONE)
     th.join(timeout=5.0)
