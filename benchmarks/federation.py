@@ -1,0 +1,252 @@
+"""Federation: throughput scaling, cross-runtime fairness, kill recovery.
+
+Three questions about the multi-runtime tier (repro.federation), all on
+deterministic SleepExecutor runtimes so the numbers characterize the
+federation layer — router, gossip, replication, failover — not model
+compute:
+
+  * scaling — aggregate drained throughput at 1/2/4/8 runtimes with the
+    *per-runtime* offered load held fixed (each runtime brings its own
+    work and its own capacity). Ideal is linear; the speedup row reports
+    thr(8)/thr(1) with a ≥6× target — what bounded-load consistent-hash
+    routing plus per-runtime scheduler runtimes must preserve of it once
+    gossip/routing/journal-mirroring overheads are on the path.
+
+  * fairness — a 10:1 weight skew (gold vs. free) saturating 4 runtimes:
+    both tenants' jobs spread across *all* runtimes (bounded-load
+    spill), each runtime's DWRR drains 10:1 locally, and the global
+    weight-normalized Jain index over a fixed mid-drain window must stay
+    ≥ 0.95 — weighted fairness has to survive sharding across runtimes.
+
+  * kill recovery — 3 runtimes, one crashed mid-drain (in-flight epochs
+    cancelled un-finalized, journal gone); its ring replica replays onto
+    a survivor. Zero loss required: every job terminal, every victim job
+    requeued — the benchmark hard-fails otherwise.
+
+Run:  PYTHONPATH=src python -m benchmarks.run --only federation
+      PYTHONPATH=src python -m benchmarks.federation
+"""
+from __future__ import annotations
+
+import sys
+import tempfile
+import time
+from pathlib import Path
+from typing import List, Tuple
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro import telemetry as telemetry_mod
+from repro.core import (DeviceKind, DynamicScheduler, GroupSpec,
+                        SleepExecutor)
+from repro.federation import FederatedService
+from repro.queue import Job, JobService, JobState
+from repro.tenancy import (ShardedQueueManager, TenantAccountant,
+                           TenantRegistry)
+
+clock = time.monotonic
+
+RATE = 5_000.0                       # items/s per simulated runtime
+JOB_ITEMS = 100
+
+
+def _make_fed(n: int, directory: str, registry=None,
+              rate: float = RATE, batch_jobs: int = 4,
+              heartbeat_s: float = 0.05) -> FederatedService:
+    """N simulated runtimes, each one accel group at ``rate`` items/s.
+    SleepExecutors spend their service time in sleep, so N runtimes
+    genuinely overlap under the GIL and scaling measures the federation
+    layer, not the interpreter."""
+
+    def make_service(rid, journal, telemetry):
+        def make_sched():
+            name = f"{rid}/accel"
+            groups = {name: GroupSpec(name, DeviceKind.ACCEL,
+                                      fixed_chunk=64,
+                                      init_throughput=rate)}
+            execs = {name: SleepExecutor(rate=rate)}
+            return DynamicScheduler(groups, execs, telemetry=telemetry)
+
+        accountant = None
+        if registry is not None:
+            queue = ShardedQueueManager(registry, telemetry=telemetry)
+            accountant = TenantAccountant(registry)
+        else:
+            queue = None
+        return JobService(make_sched, queue=queue, journal=journal,
+                          accountant=accountant, batch_jobs=batch_jobs,
+                          poll_s=0.002, telemetry=telemetry)
+
+    rids = [f"r{i}" for i in range(n)]
+    return FederatedService(make_service, rids, directory,
+                            tenants=registry,
+                            telemetry=telemetry_mod.OFF,
+                            heartbeat_s=heartbeat_s)
+
+
+# ---------------------------------------------------------------------------
+# throughput scaling at fixed per-runtime offered load
+# ---------------------------------------------------------------------------
+
+def _drain_throughput(n: int, jobs_per_runtime: int) -> Tuple[float, int]:
+    """items/s and job count for an n-runtime drain; each runtime's
+    offered load is ``jobs_per_runtime × JOB_ITEMS`` items. Tenants span
+    4× the runtime count so the ring has keys to spread."""
+    fed = _make_fed(n, tempfile.mkdtemp(prefix="fedbench-"))
+    n_jobs = jobs_per_runtime * n
+    tenants = [f"t{i}" for i in range(4 * n)]
+    jobs = [Job(items=JOB_ITEMS, tenant=tenants[i % len(tenants)])
+            for i in range(n_jobs)]
+    fed.start()
+    t0 = clock()
+    for j in jobs:
+        fed.submit(j)
+    ok = fed.run_until_idle(timeout_s=120.0)
+    dt = clock() - t0
+    fed.close()
+    done = sum(1 for j in fed._jobs.values() if j.state == JobState.DONE)
+    if not ok or done != n_jobs:
+        raise RuntimeError(
+            f"federation scale_{n}: {done}/{n_jobs} done, idle={ok}")
+    return (n_jobs * JOB_ITEMS) / dt, n_jobs
+
+
+def rows_scaling(jobs_per_runtime: int = 40,
+                 fleet=(1, 2, 4, 8)) -> List[Tuple[str, float, str]]:
+    out = []
+    thr = {}
+    for n in fleet:
+        items_s, n_jobs = _drain_throughput(n, jobs_per_runtime)
+        thr[n] = items_s
+        us_per_item = 1e6 / items_s
+        out.append((f"federation/scale_{n}", us_per_item,
+                    f"runtimes={n};items_s={items_s:.0f};jobs={n_jobs};"
+                    f"offered_per_runtime={jobs_per_runtime * JOB_ITEMS}"))
+    lo, hi = min(fleet), max(fleet)
+    speedup = thr[hi] / thr[lo]
+    target = ";target>=6x" if hi // lo >= 8 else ""
+    out.append((f"federation/scale_speedup_{lo}to{hi}", speedup * 1e6,
+                f"speedup={speedup:.2f}x;ideal={hi / lo:.0f}x{target}"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# weighted fairness spanning runtimes (10:1 skew, fixed window)
+# ---------------------------------------------------------------------------
+
+def jain_index(xs: List[float]) -> float:
+    if not xs or all(x == 0.0 for x in xs):
+        return 0.0
+    return sum(xs) ** 2 / (len(xs) * sum(x * x for x in xs))
+
+
+def rows_fairness(n: int = 4,
+                  window_s: float = 0.8) -> List[Tuple[str, float, str]]:
+    weights = {"gold": 10.0, "free": 1.0}
+    registry = TenantRegistry.parse("gold:weight=10,free:weight=1")
+    fed = _make_fed(n, tempfile.mkdtemp(prefix="fedbench-"),
+                    registry=registry, batch_jobs=8)
+    # ~2 windows of backlog per tenant across the whole fleet, so every
+    # runtime's shards stay busy through the measurement window and
+    # bounded-load routing has spilled both tenants fleet-wide
+    per_tenant_items = int(2.0 * window_s * n * RATE)
+    for _ in range(per_tenant_items // JOB_ITEMS):
+        fed.submit(Job(items=JOB_ITEMS, tenant="gold"))
+        fed.submit(Job(items=JOB_ITEMS, tenant="free"))
+    fed.start()
+    time.sleep(window_s)
+    # read the window while everything is still draining: attribution
+    # counts finalized batches only, and closing runtimes sequentially
+    # would let the later ones drain past the window
+    items = {t: 0 for t in weights}
+    spread = {t: 0 for t in weights}
+    leftover = 0
+    for node in fed.nodes().values():
+        for t, u in node.service.accountant.snapshot().items():
+            items[t] += u["items"]
+            spread[t] += u["items"] > 0
+        leftover += node.service.queue.backlog_items()
+    fed.close()
+    if leftover <= 0:
+        raise RuntimeError("fairness window outlived the backlog; "
+                           "grow per_tenant_items")
+    xs = [items[t] / w for t, w in weights.items()]
+    jain = jain_index(xs)
+    total = sum(items.values())
+    shares = ";".join(f"{t}={items[t] / max(total, 1):.3f}"
+                      for t in weights)
+    return [("federation/fairness_jain", jain * 1e6,
+             f"jain={jain:.4f};{shares};skew=10:1;runtimes={n};"
+             f"spread=gold@{spread['gold']}+free@{spread['free']};"
+             f"target>=0.95")]
+
+
+# ---------------------------------------------------------------------------
+# kill-one-runtime recovery: zero loss required
+# ---------------------------------------------------------------------------
+
+def rows_kill_recovery(n: int = 3, n_jobs: int = 60,
+                       rate: float = 2_000.0,
+                       kill_frac: float = 0.3) \
+        -> List[Tuple[str, float, str]]:
+    fed = _make_fed(n, tempfile.mkdtemp(prefix="fedbench-"), rate=rate)
+    tenants = [f"t{i}" for i in range(4 * n)]
+    jobs = [Job(items=50, tenant=tenants[i % len(tenants)])
+            for i in range(n_jobs)]
+    fed.start()
+    t0 = clock()
+    for j in jobs:
+        fed.submit(j)
+    deadline = clock() + 60.0
+    while clock() < deadline:
+        if sum(1 for j in jobs if j.state == JobState.DONE) \
+                >= kill_frac * n_jobs:
+            break
+        time.sleep(0.005)
+    victim = "r1"
+    victim_unfinished = [
+        j for j in fed._jobs.values()
+        if fed._placement.get(j.job_id) == victim
+        and j.state not in (JobState.DONE, JobState.FAILED,
+                            JobState.CANCELLED)]
+    recovered = fed.kill_runtime(victim)
+    ok = fed.run_until_idle(timeout_s=60.0)
+    dt = clock() - t0
+    fed.close()
+    final = fed._jobs
+    lost = [j for j in final.values() if j.state != JobState.DONE]
+    missing = [j for j in victim_unfinished
+               if final[j.job_id].state != JobState.DONE]
+    if not ok or lost or missing:
+        raise RuntimeError(
+            f"federation kill_recovery lost work: idle={ok} "
+            f"non_done={len(lost)} victim_missing={len(missing)}")
+    total_items = sum(j.items for j in final.values())
+    return [("federation/kill_recovery", dt * 1e6 / total_items,
+             f"runtimes={n};killed={victim};"
+             f"victim_unfinished={len(victim_unfinished)};"
+             f"requeued={len(recovered)};lost=0;done={len(final)}")]
+
+
+# ---------------------------------------------------------------------------
+
+def rows_federation() -> List[Tuple[str, float, str]]:
+    return rows_scaling() + rows_fairness() + rows_kill_recovery()
+
+
+def rows_federation_quick() -> List[Tuple[str, float, str]]:
+    """Smoke-sized profile (same row names where shapes match, so the
+    committed --quick snapshot overlaps the smoke --check run)."""
+    return (rows_scaling(jobs_per_runtime=20, fleet=(1, 4))
+            + rows_fairness(n=2, window_s=0.4)
+            + rows_kill_recovery(n=3, n_jobs=40))
+
+
+ALL = [rows_federation]
+QUICK = [rows_federation_quick]
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for name, us, derived in rows_federation():
+        print(f"{name},{us:.3f},{derived}")

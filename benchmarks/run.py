@@ -16,7 +16,7 @@ scripts/smoke.sh runs on every change.
 
 Run:  PYTHONPATH=src python -m benchmarks.run [--json out.json]
                                               [--only batch_boundary]
-                                              [--check BENCH_8.json]
+                                              [--check BENCH_9.json]
 """
 from __future__ import annotations
 
@@ -41,7 +41,8 @@ def main() -> None:
                          "contains one of the comma-separated substrings "
                          "(e.g. batch_boundary, queue_saturation, "
                          "tenant_fairness, fig7, dispatch_overhead,"
-                         "telemetry_overhead, latency_tiers, realexec — or "
+                         "telemetry_overhead, latency_tiers, federation, "
+                         "realexec — or "
                          "'dispatch_overhead,telemetry_overhead')")
     ap.add_argument("--quick", action="store_true",
                     help="tiny-size smoke profile: runs only the suites "
@@ -64,6 +65,8 @@ def main() -> None:
     from benchmarks.batch_boundary import ALL as BOUNDARY
     from benchmarks.dispatch_overhead import ALL as DISPATCH, \
         QUICK as DISPATCH_QUICK
+    from benchmarks.federation import ALL as FEDERATION, \
+        QUICK as FEDERATION_QUICK
     from benchmarks.latency_tiers import ALL as LATENCY
     from benchmarks.paper_figures import ALL as PAPER
     from benchmarks.queue_saturation import ALL as QUEUE
@@ -72,9 +75,10 @@ def main() -> None:
     from benchmarks.tenant_fairness import ALL as TENANT
 
     everything = PAPER + QUEUE + BOUNDARY + TENANT + DISPATCH \
-        + TELEMETRY + LATENCY + ADAPTIVE
+        + TELEMETRY + LATENCY + ADAPTIVE + FEDERATION
     if args.quick:
-        everything = DISPATCH_QUICK + TELEMETRY_QUICK + ADAPTIVE_QUICK
+        everything = DISPATCH_QUICK + TELEMETRY_QUICK + ADAPTIVE_QUICK \
+            + FEDERATION_QUICK
     wanted = [s.strip() for s in args.only.split(",") if s.strip()] \
         if args.only else []
     suites = [fn for fn in everything

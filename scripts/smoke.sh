@@ -9,7 +9,7 @@
 # schedule-result mismatch between the lock-per-token and range/steal
 # hot paths (and the telemetry-overhead ratio gate, which fails hard if
 # instrumentation cost creeps back onto the hot path), checked against
-# the committed BENCH_8.json snapshot so a perf regression past 3× on
+# the committed BENCH_9.json snapshot so a perf regression past 3× on
 # any quick-profile row fails the build; stage 4 is the
 # telemetry stage — a queued serve with --metrics-out whose JSONL feed is
 # validated for the key metric families; stage 5 is the preemption stage
@@ -19,8 +19,12 @@
 # idle-efficiency stage — a queued serve parked on an empty queue for
 # 1.5s whose drain must accrue only fallback-timeout wakeups (the
 # event-driven drain's liveness backstop, ≤ 1/fallback_s per second —
-# a busy-poll regression shows up as hundreds); stage 7 runs everything
-# else except the slow-marked integration / model-compile tests.
+# a busy-poll regression shows up as hundreds); stage 7 is the
+# federation stage — a 3-runtime queued serve with one runtime killed
+# mid-drain, whose metrics must show the failover firing and gossip
+# rounds accruing while every job still reaches a terminal state;
+# stage 8 runs everything else except the slow-marked integration /
+# model-compile tests.
 # Full suite: `python -m pytest -q`.
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -28,7 +32,7 @@ python -m pytest -q -x -m "not slow" \
   tests/test_scheduler.py tests/test_partitioner.py tests/test_queue.py \
   tests/test_dispatch_hotpath.py
 python -m pytest -q -x -m "not slow" tests/test_tenancy.py
-python -m benchmarks.run --quick --check BENCH_8.json
+python -m benchmarks.run --quick --check BENCH_9.json
 SMOKE_TMP="$(mktemp -d)"
 trap 'rm -rf "$SMOKE_TMP"' EXIT
 # pytest picks src/ up from pyproject pythonpath and benchmarks.run
@@ -100,6 +104,32 @@ assert timeouts <= 5, \
 assert events > 0, "drain never woke on an event"
 print(f"idle-efficiency smoke ok: {events:.0f} event wakeups, "
       f"{timeouts:.0f} fallback timeouts over a 1.5s idle tail")
+EOF
+python -m repro.launch.serve --arch yi-6b --reduced --queue \
+  --requests 24 --job-items 2 --runtimes 3 --kill-runtime 1 \
+  --journal-dir "$SMOKE_TMP/fedjournal" \
+  --metrics-out "$SMOKE_TMP/fed.jsonl" --metrics-interval 0.1 \
+  > "$SMOKE_TMP/fed-report.json"
+python - "$SMOKE_TMP" <<'EOF'
+import json, sys
+from pathlib import Path
+from repro.telemetry import read_jsonl
+tmp = Path(sys.argv[1])
+# stdout holds the fed report followed by the telemetry summary doc
+rep = json.JSONDecoder().raw_decode((tmp / "fed-report.json").read_text())[0]
+terminal = rep["done"] + rep["failed"] + rep["cancelled"]
+assert terminal == rep["jobs"], \
+    f"non-terminal jobs after federated drain: {rep['jobs'] - terminal}"
+assert rep["killed"] == ["r1"] and rep["failovers"] >= 1, \
+    f"kill drill did not fire: {rep}"
+c = read_jsonl(tmp / "fed.jsonl")[-1]["counters"]
+for fam in ("fed.failovers", "fed.gossip_rounds"):
+    assert any(k.startswith(fam) for k in c), \
+        f"missing {fam} in {sorted(k for k in c if k.startswith('fed'))}"
+print(f"federation smoke ok: {rep['jobs']} jobs terminal across "
+      f"{rep['runtimes']} runtimes, killed={rep['killed']}, "
+      f"recovered={rep['recovered']}, "
+      f"gossip_rounds={rep['gossip_rounds']}")
 EOF
 exec python -m pytest -q -m "not slow" \
   --ignore=tests/test_scheduler.py --ignore=tests/test_partitioner.py \

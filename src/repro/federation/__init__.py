@@ -1,0 +1,14 @@
+"""Multi-runtime federation: one service, many scheduler runtimes.
+
+See ``repro.federation.service`` for the architecture overview.
+"""
+from repro.federation.gossip import GossipBus, Heartbeat
+from repro.federation.replication import ReplicaSink, ReplicationRing
+from repro.federation.router import Router
+from repro.federation.service import (FederatedService, FederationReport,
+                                      RuntimeNode)
+
+__all__ = [
+    "FederatedService", "FederationReport", "GossipBus", "Heartbeat",
+    "ReplicaSink", "ReplicationRing", "Router", "RuntimeNode",
+]

@@ -22,6 +22,14 @@ the tenants and drained weighted-fair with per-tenant accounting:
       --tenants "gold:weight=10,free:weight=1:quota=8:slo=5.0" \\
       --power "accel=8:2,cpu0=4:1"
 
+Federated mode (requires --queue): the same jobs drain across N
+in-process scheduler runtimes behind one consistent-hash front door,
+with mirrored journals; ``--kill-runtime K`` runs the failure drill:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --reduced \\
+      --queue --requests 64 --runtimes 3 --kill-runtime 1 \\
+      --tenants "gold:weight=10,free:weight=1:quota=8"
+
 ``--tenants-file spec.json`` loads the same specs from a JSON file
 (``[{"name": ..., "weight": ..., "max_inflight": ..., "slo_delay_s": ...,
 "energy_budget_j": ...}, ...]``); ``--power group=active_w:idle_w,...``
@@ -141,7 +149,26 @@ def main():
                     help="keep the drain daemon alive this long after "
                          "the queue empties (idle-efficiency probe: "
                          "near-zero wakeups expected)")
+    ap.add_argument("--runtimes", type=int, default=1,
+                    help="federate the queued drain across this many "
+                         "in-process scheduler runtimes (requires "
+                         "--queue; 1 = the single-runtime path)")
+    ap.add_argument("--kill-runtime", type=int, default=None,
+                    help="failure drill (--runtimes > 1): crash runtime "
+                         "rK once half the jobs are done and fail its "
+                         "journal over to a survivor")
+    ap.add_argument("--journal-dir", default=None,
+                    help="directory for federated journals + replicas "
+                         "(default: a fresh temp dir)")
     args = ap.parse_args()
+    if args.runtimes < 1:
+        ap.error("--runtimes must be >= 1")
+    if args.runtimes > 1 and not args.queue:
+        ap.error("--runtimes requires --queue")
+    if args.kill_runtime is not None and \
+            not 0 <= args.kill_runtime < args.runtimes:
+        ap.error("--kill-runtime must name a runtime in "
+                 f"[0, {args.runtimes})")
     if args.job_items < 1:
         ap.error("--job-items must be >= 1")
     if args.deadline_ms is not None and args.deadline_ms <= 0:
@@ -230,6 +257,36 @@ def _run(args, ap, eng, groups, registry, energy_model):
                     deadline_s=deadline_s,
                     tenant=names[i % len(names)])
                 for i, n in enumerate(sizes)]
+        if args.runtimes > 1:
+            frep = eng.serve_jobs_federated(
+                jobs, runtimes=args.runtimes, slo_delay_s=args.slo,
+                batch_jobs=args.batch_jobs, journal_dir=args.journal_dir,
+                pipeline_depth=args.pipeline_depth, tenants=registry,
+                energy_model=energy_model, express=not args.no_express,
+                kill_runtime=args.kill_runtime)
+            fed = frep.fed
+            out = {
+                "runtimes": fed.runtimes, "alive": fed.alive,
+                "jobs": fed.jobs, "done": fed.done,
+                "failed": fed.failed, "cancelled": fed.cancelled,
+                "requeues": fed.requeues, "recovered": fed.recovered,
+                "failovers": fed.failovers, "killed": fed.killed,
+                "gossip_rounds": fed.gossip_rounds,
+                "drained": frep.drained,
+                "new_tokens": frep.new_tokens,
+                "time_s": round(fed.time_s, 3),
+                "tok_per_s": round(
+                    frep.new_tokens / max(fed.time_s, 1e-9), 1),
+                "per_runtime": fed.per_runtime,
+                "per_tenant_items": fed.per_tenant_items,
+            }
+            if frep.per_tenant:
+                out["per_tenant"] = {
+                    t: {k: round(v, 4) if isinstance(v, float) else v
+                        for k, v in u.items()}
+                    for t, u in frep.per_tenant.items()}
+            print(json.dumps(out, indent=2))
+            return
         policy = None
         if args.policy_window > 0:
             policy = AdaptivePolicy(window_s=args.policy_window,

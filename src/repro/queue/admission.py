@@ -93,7 +93,8 @@ class AdmissionController:
                  slo_delay_s: float = 1.0,
                  defer_factor: float = 4.0,
                  min_capacity: float = 1e-6,
-                 registry=None, telemetry=None, clock=None, policy=None):
+                 registry=None, telemetry=None, clock=None, policy=None,
+                 global_unfinished=None):
         self.queue = queue
         self.tracker = tracker
         self.ledger = ledger
@@ -114,6 +115,11 @@ class AdmissionController:
         # blind legacy gate. Kept untyped so repro.queue never imports
         # repro.tenancy at module scope (tenancy builds on queue).
         self.registry = registry
+        # federation hook: callable(tenant) -> unfinished jobs FLEET-wide
+        # (gossip-aggregated). The quota gate takes max(local, global) so
+        # a tenant cannot multiply its in-flight quota by the number of
+        # runtimes it spans. None → single-runtime behavior.
+        self.global_unfinished = global_unfinished
         self._groups: Dict[str, float] = {}      # name -> λ seed
         self._derate: Dict[str, float] = {}      # name -> straggler factor
         self._lock = threading.Lock()
@@ -296,6 +302,12 @@ class AdmissionController:
                              if j.tenant == job.tenant
                              and j.state in (JobState.ADMITTED,
                                              JobState.RUNNING))
+        if self.global_unfinished is not None:
+            # the fleet view is one heartbeat stale and may lag the local
+            # count it already includes — max() never double-counts and
+            # enforces whichever bound is tighter
+            unfinished = max(unfinished,
+                             self.global_unfinished(job.tenant))
         return unfinished < spec.max_inflight
 
     def shed_deferred(self, job: Job) -> None:

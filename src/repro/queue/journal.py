@@ -51,7 +51,32 @@ class JournalStore:
         # one fires at max(threshold, 2k), so a journal whose *live* set
         # exceeds the threshold cannot thrash a full rewrite per record
         self._next_compact = auto_compact_lines
+        self._mirror = None
         self._fh = open(self.path, "a", encoding="utf-8")
+
+    # -- replication ---------------------------------------------------
+    def attach_mirror(self, mirror) -> None:
+        """Attach a replication sink (duck-typed: ``append(line)`` plus
+        optional ``rewrite(lines)`` applied on compaction). Each record
+        is forwarded after its local write under the journal lock, so the
+        sink always holds an ordered prefix of the primary — the
+        guarantee federation failover replays against. A failing sink is
+        detached rather than taking journaling (and the drain daemon
+        above it) down."""
+        self._mirror = mirror
+
+    def _mirror_call(self, method: str, arg) -> None:
+        mirror = self._mirror
+        if mirror is None:
+            return
+        fn = getattr(mirror, method, None)
+        if fn is None:
+            return
+        try:
+            fn(arg)
+        except Exception:
+            logger.exception("journal mirror %s failed; detaching", method)
+            self._mirror = None
 
     # -- write path ----------------------------------------------------
     def record(self, job: Job, event: Optional[str] = None) -> None:
@@ -64,6 +89,7 @@ class JournalStore:
             if self.fsync:
                 os.fsync(self._fh.fileno())
             self._lines += 1
+            self._mirror_call("append", line)
             over = self._next_compact is not None \
                 and self._lines >= self._next_compact
         if over:
@@ -103,18 +129,21 @@ class JournalStore:
                 self._fh.close()
             try:
                 jobs = self.replay(self.path)
-                tmp = self.path + ".compact"
-                with open(tmp, "w", encoding="utf-8") as fh:
+                lines = [json.dumps(
+                    {"ts": time.time(), "event": job.state.value,
+                     "job": job.to_dict()}, sort_keys=True)
                     for job in sorted(jobs.values(),
                                       key=lambda j: (j.created_at,
-                                                     j.job_id)):
-                        fh.write(json.dumps(
-                            {"ts": time.time(), "event": job.state.value,
-                             "job": job.to_dict()}, sort_keys=True) + "\n")
+                                                     j.job_id))]
+                tmp = self.path + ".compact"
+                with open(tmp, "w", encoding="utf-8") as fh:
+                    for line in lines:
+                        fh.write(line + "\n")
                     fh.flush()
                     if self.fsync:
                         os.fsync(fh.fileno())
                 os.replace(tmp, self.path)
+                self._mirror_call("rewrite", lines)
             finally:
                 self._fh = open(self.path, "a", encoding="utf-8")
             self._lines = len(jobs)

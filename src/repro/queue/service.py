@@ -259,6 +259,10 @@ class JobService:
         self.max_deferred = max_deferred
         self.stats = ServiceStats()
         self._deferred: List[Job] = []
+        # job ids already replayed by recover(): a journal recovered twice
+        # (or two replicas overlapping after a messy failover) must not
+        # double-enqueue the same job. Bounded by jobs ever recovered.
+        self._recovered_ids: set = set()
         self._lock = threading.Lock()
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
@@ -379,10 +383,20 @@ class JobService:
         with the process — at-least-once, bounded by max_attempts); the
         per-tenant in-flight view starts clean because nothing recovered
         is actually on a scheduler yet.
+
+        Replay is deduplicated by job id: recovering the same journal
+        twice, or a journal whose jobs this service already holds (e.g.
+        a replica overlapping the primary), skips the duplicates instead
+        of double-enqueueing them.
         """
         to_requeue, _ = JournalStore.recover(journal_path)
+        get = getattr(self.queue, "get", None)
         restored: List[Job] = []
         for job in to_requeue:
+            if job.job_id in self._recovered_ids \
+                    or (get is not None and get(job.job_id) is not None):
+                continue
+            self._recovered_ids.add(job.job_id)
             if job.state == JobState.REQUEUED:
                 if job.attempts_left <= 0:
                     job.transition(JobState.FAILED)
@@ -793,6 +807,29 @@ class JobService:
         if self._sched is not None:
             self._sched.shutdown()
             self._sched = None
+
+    def crash(self) -> None:
+        """Kill this runtime the unclean way (failover tests, federation
+        ``kill_runtime``): stop the drain WITHOUT finalizing in-flight
+        batches — their jobs stay RUNNING, exactly the state a process
+        death leaves in the journal — and tear the scheduler down,
+        cancelling live epochs at the next chunk boundary so worker
+        threads wind up. Recovery is a survivor's job: replay the
+        (mirrored) journal via ``recover`` on a live service."""
+        self._stop.set()
+        self.wakeup.notify()
+        if self._thread is not None:
+            self._thread.join(timeout=10.0)
+            self._thread = None
+        sched = self._sched
+        if sched is not None:
+            for ib in self._inflight:
+                if isinstance(ib.handle, EpochHandle) \
+                        and not ib.handle.done():
+                    sched.cancel_epoch(ib.handle, reason="crash")
+            sched.shutdown()
+            self._sched = None
+        self._inflight.clear()
 
     def _next_deadline_delay(self) -> Optional[float]:
         """Seconds until the earliest in-flight batch deadline (service

@@ -9,6 +9,7 @@ generated tokens / wall time, which feeds eq. (4) exactly like training.
 """
 from __future__ import annotations
 
+import tempfile
 import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
@@ -68,6 +69,16 @@ class QueueServeReport:
     cancelled_batches: int = 0
 
 
+@dataclass
+class FederatedServeReport:
+    """Result of the federated path (serve_jobs_federated): the
+    federation-level report plus engine-level aggregates."""
+    fed: "object"                          # repro.federation.FederationReport
+    drained: bool
+    per_tenant: Dict[str, Dict] = field(default_factory=dict)
+    new_tokens: int = 0
+
+
 class HeteroServeEngine:
     def __init__(self, cfg: LMConfig, groups: List[GroupDef],
                  prompt_len: int = 32, decode_tokens: int = 8,
@@ -125,7 +136,7 @@ class HeteroServeEngine:
         return rng.integers(0, self.cfg.vocab, self.prompt_len,
                             dtype=np.int32)
 
-    def _make_executor(self, g: GroupDef):
+    def _make_executor(self, g: GroupDef, key: Optional[str] = None):
         cfg = self.cfg
 
         def make_inputs(token):
@@ -144,7 +155,7 @@ class HeteroServeEngine:
                     * 0.02
             return out
 
-        counter = self._fail_counters.setdefault(g.name, {"n": 0})
+        counter = self._fail_counters.setdefault(key or g.name, {"n": 0})
 
         def step(batch):
             if g.fail_after_chunks is not None:
@@ -174,30 +185,43 @@ class HeteroServeEngine:
                                 async_depth=g.async_depth,
                                 priority_boost=g.priority_boost)
 
-    def _executor_for(self, g: GroupDef) -> JaxChunkExecutor:
-        ex = self._executors.get(g.name)
+    def _executor_for(self, g: GroupDef,
+                      namespace: str = "") -> JaxChunkExecutor:
+        # executors (and fail-injection counters) are cached per
+        # *namespaced* name: federated runtimes must not share one
+        # executor's async pipeline across their dispatcher threads
+        key = namespace + g.name
+        ex = self._executors.get(key)
         if ex is None:
-            ex = self._executors[g.name] = self._make_executor(g)
+            ex = self._executors[key] = self._make_executor(g, key)
         return ex
 
     # ------------------------------------------------------------------
     def _build_scheduler(self, max_chunk: Optional[int] = None,
-                         exclude: Optional[set] = None) -> DynamicScheduler:
+                         exclude: Optional[set] = None,
+                         namespace: str = "",
+                         telemetry=None) -> DynamicScheduler:
+        """``namespace`` prefixes every group name (federation: runtime
+        ``r1``'s accel group is ``r1/accel``), so per-runtime schedulers
+        get private executors, distinct trace tracks, and unambiguous
+        dead-group exclusion."""
         specs, execs = {}, {}
         for g in self.groups:
-            if exclude and g.name in exclude:
+            name = namespace + g.name
+            if exclude and name in exclude:
                 continue
-            specs[g.name] = GroupSpec(g.name, g.kind,
-                                      fixed_chunk=g.fixed_chunk,
-                                      min_chunk=1, max_chunk=max_chunk,
-                                      init_throughput=1.0)
-            execs[g.name] = self._executor_for(g)
+            specs[name] = GroupSpec(name, g.kind,
+                                    fixed_chunk=g.fixed_chunk,
+                                    min_chunk=1, max_chunk=max_chunk,
+                                    init_throughput=1.0)
+            execs[name] = self._executor_for(g, namespace)
         if not specs:
             raise RuntimeError("no live device groups")
         return DynamicScheduler(specs, execs, alpha=self.alpha,
                                 chunk_mode=self.chunk_mode,
                                 adaptive_refill=self.adaptive_refill,
-                                telemetry=self._tel_arg())
+                                telemetry=telemetry if telemetry is not None
+                                else self._tel_arg())
 
     def _tel_arg(self):
         """Forward the engine's resolved telemetry to a component ctor
@@ -349,3 +373,118 @@ class HeteroServeEngine:
             deadline_misses=dict(st.deadline_misses),
             express_batches=st.express_batches,
             cancelled_batches=st.cancelled_batches)
+
+    # ------------------------------------------------------------------
+    # federated path: N runtimes behind one front-end (repro.federation)
+    # ------------------------------------------------------------------
+    def serve_jobs_federated(self, jobs: List[Job],
+                             runtimes: int = 3,
+                             slo_delay_s: Optional[float] = None,
+                             batch_jobs: int = 8,
+                             journal_dir: Optional[str] = None,
+                             timeout_s: float = 300.0,
+                             pipeline_depth: int = 2,
+                             tenants: Optional[TenantRegistry] = None,
+                             energy_model: Optional[EnergyModel] = None,
+                             express: bool = True,
+                             heartbeat_s: float = 0.1,
+                             kill_runtime: Optional[int] = None,
+                             kill_after_frac: float = 0.5) \
+            -> "FederatedServeReport":
+        """Serve jobs through a ``FederatedService``: ``runtimes``
+        independent JobService runtimes — each with its own persistent
+        scheduler (namespaced device groups ``rK/<group>``, private
+        executors), runtime-scoped λ-tracker/ledger, tenancy shards, and
+        mirrored journal — behind one tenant-consistent-hash front door.
+        Global tenant quotas / energy budgets bind fleet-wide via gossip.
+
+        ``kill_runtime=K`` crashes runtime ``rK`` once ``kill_after_frac``
+        of the jobs are done (failure drill: its replica replays onto a
+        survivor; the report's ``recovered`` counts the requeued jobs).
+        """
+        from repro.federation import FederatedService
+        if journal_dir is None:
+            journal_dir = tempfile.mkdtemp(prefix="repro-fed-")
+        rids = [f"r{i}" for i in range(max(1, runtimes))]
+
+        def make_service(rid: str, journal, telemetry) -> JobService:
+            tracker = ThroughputTracker(self.alpha)
+            ledger = OverheadLedger()
+            ledger.keep_records = False
+            dead: set = set()
+
+            def make_scheduler() -> DynamicScheduler:
+                sched = self._build_scheduler(exclude=dead,
+                                              namespace=f"{rid}/",
+                                              telemetry=telemetry)
+                sched.tracker = tracker
+                sched.ledger = ledger
+                return sched
+
+            accountant = None
+            if tenants is not None:
+                queue = ShardedQueueManager(tenants, telemetry=telemetry)
+                accountant = TenantAccountant(tenants,
+                                              energy_model=energy_model)
+            else:
+                queue = QueueManager()
+            admission = None
+            if slo_delay_s is not None or (tenants is not None
+                                           and tenants.any_gating()):
+                admission = AdmissionController(
+                    queue, tracker, ledger,
+                    slo_delay_s=slo_delay_s if slo_delay_s is not None
+                    else float("inf"),
+                    registry=tenants, telemetry=telemetry)
+                for g in self.groups:
+                    admission.on_group_join(f"{rid}/{g.name}", 1.0)
+            return JobService(make_scheduler, queue=queue,
+                              admission=admission, journal=journal,
+                              batch_jobs=batch_jobs,
+                              on_group_failed=dead.add,
+                              pipeline_depth=pipeline_depth,
+                              accountant=accountant,
+                              telemetry=telemetry, express=express)
+
+        fed = FederatedService(make_service, rids, journal_dir,
+                               tenants=tenants,
+                               telemetry=self._tel_arg(),
+                               heartbeat_s=heartbeat_s)
+        t0 = time.monotonic()
+        fed.start()
+        for job in jobs:
+            fed.submit(job)
+        victim = f"r{kill_runtime}" if kill_runtime is not None \
+            and 0 <= kill_runtime < len(rids) else None
+        if victim is not None:
+            threshold = max(1, int(kill_after_frac * len(jobs)))
+            deadline = time.monotonic() + timeout_s
+            while time.monotonic() < deadline:
+                done = sum(1 for j in jobs
+                           if j.state.value in ("done", "failed",
+                                                "cancelled"))
+                if done >= threshold:
+                    break
+                time.sleep(0.01)
+            fed.kill_runtime(victim)
+        drained = fed.run_until_idle(timeout_s=timeout_s)
+        rep = fed.report()
+        rep.time_s = time.monotonic() - t0
+        per_tenant: Dict[str, Dict] = {}
+        for node in fed.nodes().values():
+            acct = node.service.accountant
+            if acct is None:
+                continue
+            for t, d in acct.snapshot().items():
+                agg = per_tenant.setdefault(
+                    t, {"items": 0, "busy_s": 0.0, "energy_j": 0.0,
+                        "batches": 0})
+                agg["items"] += d["items"]
+                agg["busy_s"] += d["busy_s"]
+                agg["energy_j"] += d["energy_j"]
+                agg["batches"] += d["batches"]
+        fed.close()
+        return FederatedServeReport(
+            fed=rep, drained=drained, per_tenant=per_tenant,
+            new_tokens=sum(rep.per_tenant_items.values())
+            * self.decode_tokens)

@@ -28,8 +28,9 @@ import threading
 from typing import Any, Dict, Optional
 
 from repro.telemetry.registry import (Counter, Gauge, Histogram,
-                                      MetricsRegistry, format_key)
-from repro.telemetry.spans import SpanTracer
+                                      LabeledRegistry, MetricsRegistry,
+                                      format_key)
+from repro.telemetry.spans import LabeledTracer, SpanTracer
 from repro.telemetry.exporters import (MetricsExporter, prometheus_text,
                                        read_jsonl)
 
@@ -53,6 +54,33 @@ class Telemetry:
                          "dropped": self.tracer.dropped,
                          "sample_rate": self.tracer.sample_rate}
         return snap
+
+    def labeled(self, **labels) -> "TelemetryView":
+        """Per-runtime facet of this instance: same metric storage and
+        trace ring, but every metric carries ``labels`` and every span /
+        epoch tag is namespaced — how N federated runtimes share one
+        exporter without interleaving their families (e.g.
+        ``tel.labeled(runtime="r0")``)."""
+        return TelemetryView(self, labels)
+
+
+class TelemetryView:
+    """A ``Telemetry`` facet with constant labels stamped on (see
+    ``Telemetry.labeled``). ``resolve()`` passes it through like any
+    instance; ``snapshot()`` is the base's merged view."""
+
+    def __init__(self, base: Telemetry, labels: Dict[str, Any]):
+        self.base = base
+        self.labels = {k: str(v) for k, v in labels.items()}
+        self.registry = LabeledRegistry(base.registry, self.labels)
+        self.tracer = LabeledTracer(
+            base.tracer, "/".join(self.labels.values()) or "view")
+
+    def snapshot(self) -> Dict[str, Any]:
+        return self.base.snapshot()
+
+    def labeled(self, **labels) -> "TelemetryView":
+        return TelemetryView(self.base, {**self.labels, **labels})
 
 
 _default: Optional[Telemetry] = None
@@ -83,6 +111,7 @@ def resolve(telemetry) -> Optional[Telemetry]:
 
 __all__ = [
     "Counter", "Gauge", "Histogram", "MetricsRegistry", "MetricsExporter",
-    "SpanTracer", "Telemetry", "OFF", "default", "resolve",
+    "LabeledRegistry", "LabeledTracer", "SpanTracer", "Telemetry",
+    "TelemetryView", "OFF", "default", "resolve",
     "prometheus_text", "read_jsonl", "format_key",
 ]

@@ -80,6 +80,9 @@ class TenantAccountant:
         self.derate_floor = derate_floor
         self._usage: Dict[str, TenantUsage] = {}
         self._window_end = float("-inf")     # monotonic de-overlap cursor
+        # derates computed OUTSIDE this accountant (the federation tier's
+        # global energy budgets); merged into derate_weights() by min()
+        self._external: Dict[str, float] = {}
         self._lock = threading.Lock()
 
     def usage(self, tenant: str) -> TenantUsage:
@@ -153,19 +156,33 @@ class TenantAccountant:
             u.delay_pos += 1
 
     # -- soft energy budgets --------------------------------------------
+    def set_external_derates(self, factors: Dict[str, float]) -> None:
+        """Install weight derates computed by an outer enforcement tier
+        (federation: a tenant's *fleet-wide* joules vs. its budget).
+        Replaces the previous external map; ``derate_weights()`` merges
+        by min(), so whichever enforcement is tighter — local attribution
+        or the global aggregate — wins."""
+        with self._lock:
+            self._external = {
+                t: min(1.0, max(self.derate_floor, float(f)))
+                for t, f in factors.items()}
+
     def derate_weights(self) -> Dict[str, float]:
         """Weight factors for tenants over their soft energy budget:
         ``budget/spent`` clamped to [derate_floor, 1]; in-budget tenants
-        are omitted (full weight)."""
-        if self.registry is None:
-            return {}
+        are omitted (full weight). External (federation-global) derates
+        merge in by min()."""
         out: Dict[str, float] = {}
         with self._lock:
-            for t, u in self._usage.items():
-                budget = self.registry.get(t).energy_budget_j
-                if budget is None or u.energy_j <= budget:
-                    continue
-                out[t] = max(self.derate_floor, budget / u.energy_j)
+            external = dict(self._external)
+            if self.registry is not None:
+                for t, u in self._usage.items():
+                    budget = self.registry.get(t).energy_budget_j
+                    if budget is None or u.energy_j <= budget:
+                        continue
+                    out[t] = max(self.derate_floor, budget / u.energy_j)
+        for t, f in external.items():
+            out[t] = min(out.get(t, 1.0), f)
         return out
 
     # -- reporting ------------------------------------------------------

@@ -1,0 +1,455 @@
+"""Federation tier: routing, gossip, replication, failover, global quotas.
+
+Runtimes here are SleepExecutor-backed JobService instances — the same
+simulated-runtime harness the queue tests use, N of them behind one
+FederatedService front door.
+"""
+import os
+import time
+
+import pytest
+
+from repro import telemetry as telemetry_mod
+from repro.core import DeviceKind, DynamicScheduler, GroupSpec, SleepExecutor
+from repro.federation import (FederatedService, GossipBus, Heartbeat,
+                              ReplicationRing, Router)
+from repro.queue import Job, JobService, JobState, JournalStore
+from repro.queue.admission import AdmissionController, Decision
+from repro.tenancy import (ShardedQueueManager, TenantAccountant,
+                           TenantRegistry)
+
+RATE = 50_000.0
+
+
+def make_fed(n, directory, registry=None, rate=RATE, telemetry=None,
+             heartbeat_s=0.03, admission_for=None, **fed_kw):
+    """N one-group simulated runtimes. ``admission_for`` ("all" or None)
+    attaches a quota-aware admission gate per runtime."""
+
+    def make_service(rid, journal, tel):
+        name = f"{rid}/accel"
+
+        def make_sched():
+            groups = {name: GroupSpec(name, DeviceKind.ACCEL,
+                                      fixed_chunk=64,
+                                      init_throughput=rate)}
+            return DynamicScheduler(groups,
+                                    {name: SleepExecutor(rate=rate)},
+                                    telemetry=tel)
+
+        accountant = None
+        queue = None
+        admission = None
+        if registry is not None:
+            queue = ShardedQueueManager(registry, telemetry=tel)
+            accountant = TenantAccountant(registry)
+            if admission_for == "all":
+                admission = AdmissionController(queue, registry=registry,
+                                                telemetry=tel)
+                admission.on_group_join(name, rate)
+        return JobService(make_sched, queue=queue, admission=admission,
+                          journal=journal, accountant=accountant,
+                          batch_jobs=4, poll_s=0.002, telemetry=tel)
+
+    rids = [f"r{i}" for i in range(n)]
+    return FederatedService(
+        make_service, rids, str(directory), tenants=registry,
+        telemetry=telemetry if telemetry is not None else telemetry_mod.OFF,
+        heartbeat_s=heartbeat_s, **fed_kw)
+
+
+# ---------------------------------------------------------------------------
+# federated drain
+# ---------------------------------------------------------------------------
+
+def test_federated_drain_completes_all_jobs(tmp_path):
+    fed = make_fed(3, tmp_path)
+    jobs = [Job(items=32, tenant=f"t{i % 9}") for i in range(30)]
+    for j in jobs:
+        fed.submit(j)
+    assert fed.run_until_idle(timeout_s=30)
+    fed.close()
+    assert all(j.state == JobState.DONE for j in jobs)
+    rep = fed.report()
+    assert rep.done == 30 and rep.failed == 0
+    # the work actually spanned runtimes
+    active = [r for r, d in rep.per_runtime.items() if d["done"] > 0]
+    assert len(active) >= 2
+    assert rep.gossip_rounds == 0          # telemetry OFF -> no counter
+
+
+def test_federated_report_counts_gossip_and_placements(tmp_path):
+    tel = telemetry_mod.Telemetry()
+    fed = make_fed(2, tmp_path, telemetry=tel)
+    jobs = [Job(items=16, tenant=f"t{i}") for i in range(8)]
+    for j in jobs:
+        fed.submit(j)
+    assert fed.run_until_idle(timeout_s=30)
+    fed.close()
+    assert fed.report().gossip_rounds >= 1
+    snap = tel.snapshot()
+    routed = {k: v for k, v in snap["counters"].items()
+              if k.startswith("fed.routed")}
+    assert sum(routed.values()) == 8
+    # every routed counter carries its runtime label
+    assert all('runtime="' in k for k in routed)
+
+
+# ---------------------------------------------------------------------------
+# kill / failover
+# ---------------------------------------------------------------------------
+
+def test_kill_runtime_mid_drain_loses_nothing(tmp_path):
+    fed = make_fed(3, tmp_path, rate=2_000.0)
+    jobs = [Job(items=40, tenant=f"t{i % 12}") for i in range(36)]
+    for j in jobs:
+        fed.submit(j)
+    fed.start()
+    deadline = time.monotonic() + 30.0
+    while time.monotonic() < deadline:
+        if sum(1 for j in jobs if j.state == JobState.DONE) >= 8:
+            break
+        time.sleep(0.005)
+    victim_unfinished = [
+        j for j in jobs if fed._placement[j.job_id] == "r1"
+        and j.state != JobState.DONE]
+    recovered = fed.kill_runtime("r1")
+    assert {j.job_id for j in recovered} \
+        == {j.job_id for j in victim_unfinished}
+    assert fed.run_until_idle(timeout_s=30)
+    fed.close()
+    # zero loss: every job (original or re-materialized) is DONE
+    final = fed._jobs
+    assert len(final) == 36
+    assert all(j.state == JobState.DONE for j in final.values())
+    rep = fed.report()
+    assert rep.failovers == 1 and rep.killed == ["r1"]
+    assert rep.recovered == len(victim_unfinished)
+    # the victim's replica was replayed, not its (dead) primary journal —
+    # and the survivors did the work
+    assert fed._nodes["r1"].alive is False
+    assert all(fed._placement[j.job_id] != "r1" for j in recovered)
+
+
+def test_kill_runtime_preserves_tier_and_deadline_metadata(tmp_path):
+    fed = make_fed(2, tmp_path, rate=500.0)
+    far = time.time() + 3600.0
+    jobs = [Job(items=40, tenant=f"t{i}", tier="urgent", priority=2,
+                deadline_s=far) for i in range(6)]
+    for j in jobs:
+        fed.submit(j)
+    victims = [j for j in jobs if fed._placement[j.job_id] == "r0"]
+    assert victims                        # 6 tenants: both runtimes used
+    recovered = fed.kill_runtime("r0")
+    by_id = {j.job_id: j for j in recovered}
+    for v in victims:
+        r = by_id[v.job_id]
+        assert r.tier == "urgent" and r.priority == 2
+        assert r.deadline_s == pytest.approx(far)
+    assert fed.run_until_idle(timeout_s=30)
+    fed.close()
+    assert all(j.state == JobState.DONE for j in fed._jobs.values())
+
+
+def test_kill_last_runtime_recovers_nothing(tmp_path):
+    fed = make_fed(1, tmp_path)
+    j = Job(items=16)
+    fed.submit(j)
+    assert fed.kill_runtime("r0") == []
+    assert fed.alive_nodes() == []
+    # further submissions are rejected, not silently dropped
+    dec = fed.submit(Job(items=4))
+    assert dec.decision == Decision.REJECT
+    fed.close()
+
+
+def test_survivor_walks_past_dead_peers(tmp_path):
+    fed = make_fed(3, tmp_path)
+    assert fed.run_until_idle(timeout_s=10)
+    ring = fed.ring
+    first = ring.peer_of("r0")
+    fed.kill_runtime(first)                # r0's peer dies first
+    fed.kill_runtime("r0")                 # handoff must skip the corpse
+    [last] = [n.runtime_id for n in fed.alive_nodes()]
+    assert last not in ("r0", first)
+    fed.close()
+
+
+# ---------------------------------------------------------------------------
+# journal replication
+# ---------------------------------------------------------------------------
+
+def test_replica_matches_primary_after_drain(tmp_path):
+    fed = make_fed(2, tmp_path)
+    for i in range(10):
+        fed.submit(Job(items=16, tenant=f"t{i}"))
+    assert fed.run_until_idle(timeout_s=30)
+    fed.close()
+    for rid in ("r0", "r1"):
+        with open(fed.ring.journal_path(rid)) as fh:
+            primary = fh.read()
+        with open(fed.ring.replica_path(rid)) as fh:
+            replica = fh.read()
+        assert replica == primary and primary
+
+
+def test_replica_follows_compaction(tmp_path):
+    ring = ReplicationRing(["a", "b"], str(tmp_path))
+    js = JournalStore(ring.journal_path("a"))
+    js.attach_mirror(ring.make_sink("a"))
+    jobs = [Job(items=4) for _ in range(5)]
+    for j in jobs:
+        j.transition(JobState.ADMITTED)
+        js.record(j)
+        j.transition(JobState.RUNNING)
+        js.record(j)
+    js.compact()
+    j = jobs[0]
+    j.transition(JobState.DONE)
+    js.record(j)                           # appends post-compaction
+    js.close()
+    with open(ring.journal_path("a")) as fh:
+        primary = fh.read()
+    with open(ring.replica_path("a")) as fh:
+        replica = fh.read()
+    assert replica == primary
+    replay = JournalStore.replay(ring.replica_path("a"))
+    assert replay[j.job_id].state == JobState.DONE
+
+
+def test_mirror_failure_detaches_without_breaking_journal(tmp_path):
+    class Exploding:
+        def append(self, line):
+            raise OSError("disk gone")
+
+    js = JournalStore(str(tmp_path / "j.jsonl"))
+    js.attach_mirror(Exploding())
+    job = Job(items=4)
+    job.transition(JobState.ADMITTED)
+    js.record(job)                         # must not raise
+    assert js._mirror is None              # detached after first failure
+    js.record(job)
+    js.close()
+    assert len(JournalStore.replay(str(tmp_path / "j.jsonl"))) == 1
+
+
+def test_recovery_source_prefers_replica(tmp_path):
+    ring = ReplicationRing(["a", "b", "c"], str(tmp_path))
+    assert ring.peer_of("a") == "b" and ring.peer_of("c") == "a"
+    assert ring.recovery_source("a") == ring.journal_path("a")
+    open(ring.replica_path("a"), "w").close()
+    assert ring.recovery_source("a") == ring.replica_path("a")
+
+
+# ---------------------------------------------------------------------------
+# recover() double-replay guard (regression for the dedupe satellite)
+# ---------------------------------------------------------------------------
+
+def _sched_factory():
+    groups = {"g0": GroupSpec("g0", DeviceKind.BIG,
+                              init_throughput=50_000)}
+    return DynamicScheduler(groups, {"g0": SleepExecutor(rate=50_000)})
+
+
+def test_recover_twice_does_not_double_enqueue(tmp_path):
+    path = str(tmp_path / "dead.jsonl")
+    with JournalStore(path) as js:
+        for _ in range(4):
+            j = Job(items=8)
+            j.transition(JobState.ADMITTED)
+            js.record(j)
+    svc = JobService(_sched_factory)
+    assert len(svc.recover(path)) == 4
+    assert svc.recover(path) == []         # replayed ids are remembered
+    assert svc.queue.depth() == 4
+    # a replica overlapping the primary (messy failover) dedupes too,
+    # even for jobs the queue has already drained
+    assert svc.run_until_idle(timeout_s=30)
+    assert svc.recover(path) == []
+    assert svc.queue.depth() == 0
+    svc.close()
+
+
+def test_crash_leaves_inflight_unfinalized(tmp_path):
+    path = str(tmp_path / "crash.jsonl")
+    svc = JobService(_sched_factory, journal=JournalStore(path),
+                     batch_jobs=2, poll_s=0.002)
+    # items sized so the batch is still mid-flight when we crash
+    jobs = [Job(items=2000) for _ in range(2)]
+    for j in jobs:
+        svc.submit(j)
+    svc.start()
+    deadline = time.monotonic() + 10.0
+    while time.monotonic() < deadline and not svc._inflight:
+        time.sleep(0.002)
+    svc.crash()
+    assert svc._sched is None and svc._thread is None
+    assert not any(j.state == JobState.DONE for j in jobs)
+    # the journal still says RUNNING/ADMITTED -> a recovery replays them
+    svc2 = JobService(_sched_factory)
+    recovered = svc2.recover(path)
+    assert {j.job_id for j in recovered} == {j.job_id for j in jobs}
+    assert svc2.run_until_idle(timeout_s=30)
+    svc2.close()
+    assert all(j.state == JobState.DONE for j in recovered)
+
+
+# ---------------------------------------------------------------------------
+# global quotas and energy budgets
+# ---------------------------------------------------------------------------
+
+def test_global_quota_binds_fleet_wide(tmp_path):
+    reg = TenantRegistry.parse("capped:weight=1:quota=4,open:weight=1")
+    fed = make_fed(3, tmp_path, registry=reg, admission_for="all")
+    decisions = [fed.submit(Job(items=8, tenant="capped"))
+                 for _ in range(12)]
+    admits = sum(d.decision == Decision.ADMIT for d in decisions)
+    # without the gossip-aggregated gate each of the 3 runtimes would
+    # admit 4 (= 12); globally the quota stays 4
+    assert admits == 4
+    assert sum(d.decision == Decision.DEFER for d in decisions) == 8
+    assert fed.global_unfinished("capped") == 4
+    # deferred jobs drain once capacity frees up: nothing is lost
+    assert fed.run_until_idle(timeout_s=30)
+    fed.close()
+    assert all(j.state == JobState.DONE for j in fed._jobs.values())
+    assert len(fed._jobs) == 12
+
+
+def test_global_energy_budget_derates_every_runtime(tmp_path):
+    reg = TenantRegistry.parse("hog:weight=1:energy=100,meek:weight=1")
+    fed = make_fed(2, tmp_path, registry=reg)
+    # fake fleet-wide spend: 2 runtimes each report 150 J for "hog"
+    now = fed.bus.clock()
+    for rid in ("r0", "r1"):
+        fed.bus.publish(Heartbeat(runtime_id=rid, ts=now,
+                                  capacity_items_s=1.0,
+                                  energy_j={"hog": 150.0}))
+    fed._apply_energy_budgets()
+    for node in fed.alive_nodes():
+        derates = node.service.accountant.derate_weights()
+        assert derates["hog"] == pytest.approx(100.0 / 300.0)
+        assert "meek" not in derates
+        # and the queue saw it
+        assert node.service.queue.effective_weight("hog") \
+            == pytest.approx(1.0 * 100.0 / 300.0)
+    fed.close()
+
+
+def test_external_derates_min_merge_with_local():
+    reg = TenantRegistry.parse("t:weight=1:energy=10")
+    acct = TenantAccountant(reg)
+    acct.set_external_derates({"t": 0.5})
+    assert acct.derate_weights() == {"t": 0.5}
+    # local attribution says 0.2 (spent 50 J on a 10 J budget): min wins
+    acct._usage.setdefault("t", type(acct.usage("t"))()).energy_j = 50.0
+    assert acct.derate_weights()["t"] == pytest.approx(0.2)
+    # replacing the external map with a looser factor keeps local binding
+    acct.set_external_derates({"t": 0.9})
+    assert acct.derate_weights()["t"] == pytest.approx(0.2)
+
+
+# ---------------------------------------------------------------------------
+# gossip staleness
+# ---------------------------------------------------------------------------
+
+def test_stale_heartbeat_derates_linearly_to_floor():
+    t = [0.0]
+    bus = GossipBus(stale_after_s=1.0, clock=lambda: t[0])
+    bus.publish(Heartbeat(runtime_id="a", ts=0.0, capacity_items_s=100.0))
+    assert bus.effective_capacity("a") == pytest.approx(100.0)
+    t[0] = 1.0                             # inside the window: full trust
+    assert bus.effective_capacity("a") == pytest.approx(100.0)
+    t[0] = 1.5                             # halfway through decay
+    assert bus.effective_capacity("a") == pytest.approx(50.0)
+    t[0] = 10.0                            # floored, never zero
+    assert bus.effective_capacity("a") == pytest.approx(10.0)
+    assert bus.effective_capacity("ghost") == 0.0
+    bus.drop("a")
+    assert bus.effective_capacity("a") == 0.0
+
+
+def test_gossip_fleet_aggregates():
+    bus = GossipBus()
+    bus.publish(Heartbeat(runtime_id="a", ts=bus.clock(),
+                          unfinished_jobs={"t": 3}, energy_j={"t": 5.0}))
+    bus.publish(Heartbeat(runtime_id="b", ts=bus.clock(),
+                          unfinished_jobs={"t": 2, "u": 1},
+                          energy_j={"t": 7.0}))
+    assert bus.unfinished("t") == 5 and bus.unfinished("u") == 1
+    assert bus.energy("t") == pytest.approx(12.0)
+    assert bus.tenants() == {"t", "u"}
+
+
+# ---------------------------------------------------------------------------
+# per-runtime telemetry namespace
+# ---------------------------------------------------------------------------
+
+def test_labeled_registry_separates_runtimes():
+    tel = telemetry_mod.Telemetry()
+    tel.labeled(runtime="r0").registry.counter("svc.batches").add(2)
+    tel.labeled(runtime="r1").registry.counter("svc.batches").add(5)
+    snap = tel.snapshot()
+    assert snap["counters"]['svc.batches{runtime="r0"}'] == 2
+    assert snap["counters"]['svc.batches{runtime="r1"}'] == 5
+
+
+def test_labeled_tracer_namespaces_epoch_tags():
+    tel = telemetry_mod.Telemetry()
+    v0, v1 = tel.labeled(runtime="r0"), tel.labeled(runtime="r1")
+    v0.tracer.tag_epoch(0, {"batch": "a"})
+    v1.tracer.tag_epoch(0, {"batch": "b"})  # same epoch index, no clash
+    assert v0.tracer.epoch_tag(0) == {"batch": "a"}
+    assert v1.tracer.epoch_tag(0) == {"batch": "b"}
+
+
+def test_resolve_passes_views_through():
+    tel = telemetry_mod.Telemetry()
+    view = tel.labeled(runtime="rX")
+    assert telemetry_mod.resolve(view) is view
+    assert telemetry_mod.resolve(telemetry_mod.OFF) is None
+
+
+# ---------------------------------------------------------------------------
+# router basics (the hypothesis suite deepens these)
+# ---------------------------------------------------------------------------
+
+def test_router_empty_and_membership():
+    r = Router()
+    assert r.place("k") is None
+    r.add_runtime("a")
+    assert r.place("k") == "a"
+    r.add_runtime("a")                     # idempotent
+    assert r.runtimes() == ["a"]
+    r.remove_runtime("a")
+    assert r.place("k") is None
+    with pytest.raises(ValueError):
+        Router(bound=1.0)
+
+
+def test_router_bounded_load_spills_hot_key():
+    r = Router(["a", "b", "c", "d"], bound=1.25)
+    placed = r.place_many(["hot"] * 100, weight=1.0)
+    assert len(placed) == 1                # place_many keys are unique
+    # water-fill one hot key by hand: it must spread once over bound
+    loads = {}
+    hit = set()
+    for _ in range(100):
+        rid = r.place("hot", loads)
+        hit.add(rid)
+        loads[rid] = loads.get(rid, 0.0) + 1.0
+    assert len(hit) == 4
+    total = sum(loads.values())
+    for rid, load in loads.items():
+        assert load <= 1.25 * r.capacity_share(rid) * (total + 1) + 1.0
+
+
+def test_router_capacity_share_attracts_proportionally():
+    r = Router(["big", "small"], bound=1.1)
+    r.set_capacity("big", 9.0)
+    r.set_capacity("small", 1.0)
+    loads = {}
+    for i in range(200):
+        rid = r.place(f"k{i}", loads)
+        loads[rid] = loads.get(rid, 0.0) + 1.0
+    assert loads["big"] > loads["small"] * 4

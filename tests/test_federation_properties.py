@@ -1,0 +1,98 @@
+"""Property tests for the federation router (bounded-load consistent
+hashing). Skipped when hypothesis isn't installed — the example-based
+coverage lives in tests/test_federation.py.
+"""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.federation import Router  # noqa: E402
+
+KEYS = st.lists(st.text(alphabet="abcdefghij0123456789", min_size=1,
+                        max_size=12),
+                min_size=1, max_size=200, unique=True)
+FLEET = st.integers(min_value=1, max_value=8)
+BOUND = st.floats(min_value=1.05, max_value=2.0)
+
+
+def _fresh_placements(router, keys):
+    """Pure ring placement (no load feedback): each key's walk stops at
+    its first runtime, so placement is a deterministic function of the
+    ring alone."""
+    return {k: router.place(k) for k in keys}
+
+
+@settings(max_examples=50, deadline=None)
+@given(keys=KEYS, n=FLEET, bound=BOUND)
+def test_bounded_load_balance(keys, n, bound):
+    """Water-filling unit loads never leaves a runtime past its bound:
+    load_r <= max(w, bound * share_r * (total + w)) at every admit, so
+    the final load obeys the final total's limit too."""
+    router = Router([f"r{i}" for i in range(n)], bound=bound)
+    loads = {}
+    for k in keys:
+        for _ in range(5):                 # 5 units per key
+            rid = router.place(k, loads)
+            assert rid is not None
+            loads[rid] = loads.get(rid, 0.0) + 1.0
+    total = sum(loads.values())
+    for rid, load in loads.items():
+        limit = max(1.0, bound * router.capacity_share(rid) * (total + 1))
+        assert load <= limit + 1e-6
+
+
+@settings(max_examples=50, deadline=None)
+@given(keys=KEYS, n=st.integers(min_value=1, max_value=7))
+def test_join_moves_keys_only_to_joiner(keys, n):
+    """Adding a runtime remaps only keys whose walk now hits the new
+    vnodes first — every moved key moves TO the joiner, never between
+    survivors, and the expected moved fraction is ~1/(n+1)."""
+    router = Router([f"r{i}" for i in range(n)])
+    before = _fresh_placements(router, keys)
+    router.add_runtime("joiner")
+    after = _fresh_placements(router, keys)
+    moved = {k for k in keys if before[k] != after[k]}
+    assert all(after[k] == "joiner" for k in moved)
+    # ~K/(n+1) expected; generous slack absorbs vnode variance without
+    # letting a broken ring (rehash-everything) pass
+    if len(keys) >= 50:
+        assert len(moved) <= len(keys) * (2.5 / (n + 1)) + 5
+
+
+@settings(max_examples=50, deadline=None)
+@given(keys=KEYS, n=st.integers(min_value=2, max_value=8))
+def test_leave_moves_only_the_departed_runtimes_keys(keys, n):
+    router = Router([f"r{i}" for i in range(n)])
+    before = _fresh_placements(router, keys)
+    router.remove_runtime("r0")
+    after = _fresh_placements(router, keys)
+    for k in keys:
+        if before[k] != "r0":
+            assert after[k] == before[k]
+        else:
+            assert after[k] != "r0" and after[k] is not None
+
+
+@settings(max_examples=50, deadline=None)
+@given(keys=KEYS, n=FLEET, bound=BOUND,
+       caps=st.lists(st.floats(min_value=0.1, max_value=10.0),
+                     min_size=8, max_size=8))
+def test_placement_deterministic_given_identical_state(keys, n, bound,
+                                                       caps):
+    """Two routers built from the same membership, capacities (gossip
+    state), and loads place every key identically — N federation
+    front-ends sharing a gossip view agree without coordination."""
+    def build():
+        r = Router([f"r{i}" for i in range(n)], bound=bound)
+        for i in range(n):
+            r.set_capacity(f"r{i}", caps[i])
+        return r
+
+    a, b = build(), build()
+    placed_a = a.place_many(keys)
+    placed_b = b.place_many(keys)
+    assert placed_a == placed_b
+    loads = {f"r{i}": float(i) for i in range(n)}
+    for k in keys:
+        assert a.place(k, dict(loads)) == b.place(k, dict(loads))
