@@ -1,0 +1,337 @@
+"""Chaos soak: seeded randomized fault schedules against a federated serve.
+
+The robustness headline for the chaos plane (repro.chaos): N seeds, each
+expanded by ``FaultPlan.generate`` into a layered fault schedule —
+executor chunk exceptions / hangs / slowdowns, journal fsync stalls /
+corrupt records / torn tails, federation gossip drops / delays /
+partitions / mirror failures / runtime kills, queue clock skew /
+swallowed arrival notifications — injected into a live 3-runtime
+federated drain while jobs trickle in across the fault horizon.
+
+Every seed must satisfy, or the benchmark hard-fails:
+
+  * zero job loss — every submitted job reaches a terminal state
+    (DONE / FAILED / CANCELLED; FAILED only via the bounded retry budget
+    or attempts cap, i.e. a recorded verdict, not silence);
+  * zero duplicate completions — no job id carries more than one
+    ``done`` record across all primary journals (the dedup guard on
+    failover replay, under torn/corrupted journals and mirror gaps);
+  * bounded recovery — once the fault horizon closes, the fleet drains
+    to idle within ``recovery_bound_s``.
+
+Determinism is a row of its own: the same seed must produce a
+byte-identical plan (``FaultPlan.to_json``), so any soak failure is
+replayable with ``--chaos-seed`` on the serve CLI.
+
+``--composed`` runs the hand-authored smoke drill instead (2 runtimes:
+gossip delay on r1, an executor hang on r0's group, then r1 killed) —
+the scripts/smoke.sh chaos stage, with ``--metrics-out`` emitting the
+final telemetry snapshot for its validator.
+
+Run:  PYTHONPATH=src python -m benchmarks.run --only chaos_soak
+      PYTHONPATH=src python -m benchmarks.chaos_soak [--seeds N]
+      PYTHONPATH=src python -m benchmarks.chaos_soak --composed \
+          --metrics-out /tmp/chaos.jsonl
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import tempfile
+import time
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro import telemetry as telemetry_mod
+from repro.chaos import ChaosExecutor, ChaosInjector, FaultEvent, FaultPlan
+from repro.core import (DeviceKind, DynamicScheduler, GroupSpec,
+                        SleepExecutor)
+from repro.core.throughput import ThroughputTracker
+from repro.federation import FederatedService
+from repro.queue import (AdmissionController, Job, JobService, JobState,
+                         QueueManager)
+from repro.queue import job as job_mod
+from repro.runtime.fault_tolerance import Watchdog
+from repro.telemetry.exporters import MetricsExporter
+
+clock = time.monotonic
+
+RATE = 3_000.0                      # items/s per simulated runtime
+JOB_ITEMS = 40
+TERMINAL = (JobState.DONE, JobState.FAILED, JobState.CANCELLED)
+
+
+def _make_chaos_fed(n: int, directory: str, injector: ChaosInjector,
+                    rate: float = RATE, batch_jobs: int = 4,
+                    heartbeat_s: float = 0.05,
+                    telemetry=None) -> FederatedService:
+    """N simulated runtimes with the full fault surface wired: every
+    executor wrapped in ChaosExecutor + Watchdog, every queue's arrival
+    listeners guarded, every admission clock skewable, and the
+    federation itself holding the injector (gossip faults, scheduled
+    kills, journal write filters, mirror-failure sinks)."""
+
+    def make_service(rid, journal, tel):
+        name = f"{rid}/accel"
+        tracker = ThroughputTracker(0.5)
+        tracker.seed(name, rate)
+        # tight watchdog: injected hangs run 0.3-0.8s, so a 0.25s floor
+        # catches every one mid-sleep without tripping on honest chunks
+        # (fixed_chunk=32 at `rate` is ~11ms, well under the floor)
+        wd = Watchdog(tracker, timeout_factor=4.0, min_timeout_s=0.25)
+
+        def make_sched():
+            groups = {name: GroupSpec(name, DeviceKind.ACCEL,
+                                      fixed_chunk=32,
+                                      init_throughput=rate)}
+            execs = {name: ChaosExecutor(SleepExecutor(rate=rate), name,
+                                         injector, watchdog=wd)}
+            sched = DynamicScheduler(groups, execs, telemetry=tel)
+            sched.tracker = tracker
+            return sched
+
+        queue = injector.wrap_queue(QueueManager(), rid)
+        # defer_factor=inf: a faulted group's empty-capacity window
+        # DEFERs arrivals (the bounded retry budget re-offers them, and
+        # exhaustion is a terminal FAILED verdict) instead of REJECTing
+        # work the rebuild would have absorbed milliseconds later
+        admission = AdmissionController(
+            queue, tracker, slo_delay_s=10.0,
+            defer_factor=float("inf"),
+            clock=injector.skewed_clock(rid, base=lambda: job_mod.now()),
+            telemetry=tel)
+        admission.on_group_join(name, rate)
+        return JobService(make_sched, queue=queue, admission=admission,
+                          journal=journal, batch_jobs=batch_jobs,
+                          poll_s=0.002, watchdog=wd, health_poll_s=0.05,
+                          fallback_s=0.25, telemetry=tel)
+
+    rids = [f"r{i}" for i in range(n)]
+    return FederatedService(make_service, rids, directory,
+                            telemetry=telemetry, heartbeat_s=heartbeat_s,
+                            chaos=injector)
+
+
+def _duplicate_done(directory: str) -> Dict[str, int]:
+    """job_id -> ``done`` record count, for ids seen more than once
+    across all *primary* journals (replicas mirror primaries and the
+    merged ``*.recovery.jsonl`` files re-state them, so only primaries
+    count). Unparseable lines are chaos corruption artifacts — skipped,
+    exactly as ``replay_stats`` skips them."""
+    counts: Dict[str, int] = {}
+    for path in sorted(Path(directory).glob("*.journal.jsonl")):
+        with open(path, "r", encoding="utf-8") as fh:
+            for line in fh:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    rec = json.loads(line)
+                except (json.JSONDecodeError, ValueError):
+                    continue
+                if not isinstance(rec, dict) or rec.get("event") != "done":
+                    continue
+                jid = (rec.get("job") or {}).get("job_id")
+                if jid:
+                    counts[jid] = counts.get(jid, 0) + 1
+    return {jid: c for jid, c in counts.items() if c > 1}
+
+
+def run_seed(seed: int, runtimes: int = 3, n_jobs: int = 30,
+             horizon_s: float = 1.5, rate: float = RATE,
+             events_per_s: float = 2.0, recovery_bound_s: float = 30.0,
+             plan: Optional[FaultPlan] = None, telemetry=None,
+             directory: Optional[str] = None) -> Dict[str, float]:
+    """One soak: generate (or accept) a plan, drain under it, enforce
+    the zero-loss / zero-dupe / bounded-recovery invariants."""
+    directory = directory or tempfile.mkdtemp(prefix=f"chaos{seed}-")
+    rids = [f"r{i}" for i in range(runtimes)]
+    if plan is None:
+        plan = FaultPlan.generate(seed, horizon_s, rids,
+                                  [f"{r}/accel" for r in rids],
+                                  events_per_s=events_per_s)
+    injector = ChaosInjector(plan, telemetry=telemetry)
+    fed = _make_chaos_fed(runtimes, directory, injector, rate=rate,
+                          telemetry=telemetry)
+    tenants = [f"t{i}" for i in range(4 * runtimes)]
+    jobs: List[Job] = []
+    fed.start()                      # opens the injector's clock too
+    t0 = clock()
+    # trickle submissions across the fault horizon so faults land on a
+    # live mix of queued / in-flight / finishing work, not a cold burst
+    waves = 6
+    for w in range(waves):
+        for _ in range(n_jobs // waves + (w < n_jobs % waves)):
+            j = Job(items=JOB_ITEMS, max_attempts=6,
+                    tenant=tenants[len(jobs) % len(tenants)])
+            jobs.append(j)
+            fed.submit(j)
+        time.sleep(max(0.0, t0 + (w + 1) * plan.horizon_s / waves
+                       - clock()))
+    while not injector.done():       # let the tail of the plan fire
+        time.sleep(0.01)
+    t_rec = clock()
+    ok = fed.run_until_idle(timeout_s=recovery_bound_s)
+    recovery_s = clock() - t_rec
+    wall_s = clock() - t0
+    fed.close()
+
+    final = fed._jobs
+    missing = [j.job_id for j in jobs if j.job_id not in final]
+    nonterminal = [j.job_id for j in final.values()
+                   if j.state not in TERMINAL]
+    dupes = _duplicate_done(directory)
+    if not ok or missing or nonterminal or dupes \
+            or recovery_s > recovery_bound_s:
+        raise RuntimeError(
+            f"chaos_soak seed={seed} violated invariants: idle={ok} "
+            f"missing={len(missing)} nonterminal={len(nonterminal)} "
+            f"dupes={dupes} recovery_s={recovery_s:.2f} "
+            f"(bound {recovery_bound_s}); plan={plan.to_json()}")
+    states = {s: sum(1 for j in final.values() if j.state == s)
+              for s in TERMINAL}
+    return {"seed": seed, "events": len(plan.events),
+            "injected": injector.injected,
+            "kills": sum(1 for e in plan.events
+                         if e.layer == "federation" and e.kind == "kill"),
+            "jobs": len(jobs), "done": states[JobState.DONE],
+            "failed": states[JobState.FAILED],
+            "cancelled": states[JobState.CANCELLED],
+            "wall_s": wall_s, "recovery_s": recovery_s,
+            "items": len(jobs) * JOB_ITEMS}
+
+
+# ---------------------------------------------------------------------------
+# rows
+# ---------------------------------------------------------------------------
+
+def rows_plan_determinism(seed: int = 7) -> List[Tuple[str, float, str]]:
+    """Same seed → byte-identical schedule (the replayability contract
+    behind --chaos-seed); also times plan generation."""
+    rids, groups = ["r0", "r1", "r2"], ["r0/accel", "r1/accel", "r2/accel"]
+    t0 = clock()
+    a = FaultPlan.generate(seed, 2.0, rids, groups).to_json()
+    dt = clock() - t0
+    b = FaultPlan.generate(seed, 2.0, rids, groups).to_json()
+    c = FaultPlan.generate(seed + 1, 2.0, rids, groups).to_json()
+    if a != b:
+        raise RuntimeError("chaos_soak: same-seed plans differ")
+    if a == c:
+        raise RuntimeError("chaos_soak: different-seed plans identical")
+    return [("chaos_soak/plan_determinism", dt * 1e6,
+             f"seed={seed};events={len(FaultPlan.from_json(a).events)};"
+             f"byte_identical=yes;cross_seed_distinct=yes")]
+
+
+def rows_chaos_soak(n_seeds: int = 20, first_seed: int = 1,
+                    runtimes: int = 3,
+                    n_jobs: int = 30) -> List[Tuple[str, float, str]]:
+    out: List[Tuple[str, float, str]] = []
+    total_injected = total_kills = 0
+    max_recovery = 0.0
+    us_all: List[float] = []
+    for seed in range(first_seed, first_seed + n_seeds):
+        r = run_seed(seed, runtimes=runtimes, n_jobs=n_jobs)
+        us = r["wall_s"] * 1e6 / r["items"]
+        us_all.append(us)
+        total_injected += r["injected"]
+        total_kills += r["kills"]
+        max_recovery = max(max_recovery, r["recovery_s"])
+        out.append((f"chaos_soak/seed_{seed}", us,
+                    f"events={r['events']};injected={r['injected']};"
+                    f"kills={r['kills']};jobs={r['jobs']};"
+                    f"done={r['done']};failed={r['failed']};"
+                    f"cancelled={r['cancelled']};lost=0;dupes=0;"
+                    f"recovery_s={r['recovery_s']:.3f}"))
+    out.append(("chaos_soak/aggregate", sum(us_all) / len(us_all),
+                f"seeds={n_seeds};runtimes={runtimes};"
+                f"injected={total_injected};kills={total_kills};"
+                f"lost=0;dupes=0;max_recovery_s={max_recovery:.3f}"))
+    return out
+
+
+def rows_chaos() -> List[Tuple[str, float, str]]:
+    return rows_plan_determinism() + rows_chaos_soak()
+
+
+ALL = [rows_chaos]
+
+
+# ---------------------------------------------------------------------------
+# composed smoke drill (scripts/smoke.sh chaos stage)
+# ---------------------------------------------------------------------------
+
+def composed_plan(horizon_s: float = 1.2) -> FaultPlan:
+    """The hand-authored drill: gossip delayed from r1 while r0's group
+    hangs long enough to trip the watchdog, then r1 is killed outright —
+    three layers faulting in overlap, recovery still owes zero loss."""
+    return FaultPlan.compose([
+        FaultEvent(at_s=0.20, layer="federation", kind="gossip_delay",
+                   target="r1", duration_s=0.40, magnitude=1.0),
+        FaultEvent(at_s=0.35, layer="executor", kind="hang",
+                   target="r0/accel", magnitude=0.40),
+        FaultEvent(at_s=0.70, layer="federation", kind="kill",
+                   target="r1"),
+    ], horizon_s=horizon_s)
+
+
+def run_composed(metrics_out: Optional[str] = None,
+                 directory: Optional[str] = None) -> Dict[str, float]:
+    telemetry = telemetry_mod.Telemetry()
+    exporter = None
+    if metrics_out:
+        exporter = MetricsExporter(telemetry, metrics_path=metrics_out,
+                                   interval_s=0.2).start()
+    try:
+        r = run_seed(-1, runtimes=2, n_jobs=24, plan=composed_plan(),
+                     telemetry=telemetry, directory=directory)
+    finally:
+        if exporter is not None:
+            exporter.stop()
+    return r
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--seeds", type=int, default=20,
+                    help="randomized schedules to soak (default 20)")
+    ap.add_argument("--first-seed", type=int, default=1)
+    ap.add_argument("--runtimes", type=int, default=3)
+    ap.add_argument("--composed", action="store_true",
+                    help="run the hand-authored 2-runtime smoke drill "
+                         "(gossip delay + hang + kill) instead of the "
+                         "seeded soak")
+    ap.add_argument("--journal-dir", default=None, metavar="DIR",
+                    help="keep journals under DIR (smoke validators "
+                         "scan them); default is a fresh tempdir")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="JSONL telemetry feed (final snapshot flagged "
+                         "final=true), composed mode only")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write rows as JSON (BENCH_N.json format)")
+    args = ap.parse_args()
+    if args.composed:
+        r = run_composed(metrics_out=args.metrics_out,
+                         directory=args.journal_dir)
+        print(json.dumps({k: v for k, v in r.items()}, sort_keys=True))
+        return
+    rows = rows_plan_determinism() \
+        + rows_chaos_soak(n_seeds=args.seeds, first_seed=args.first_seed,
+                          runtimes=args.runtimes)
+    print("name,us_per_call,derived")
+    out = []
+    for name, us, derived in rows:
+        print(f"{name},{us:.3f},{derived}")
+        out.append({"name": name, "us_per_call": round(us, 3),
+                    "derived": derived})
+    if args.json:
+        with open(args.json, "w", encoding="utf-8") as fh:
+            json.dump(out, fh, indent=2)
+            fh.write("\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -42,7 +42,7 @@ def main() -> None:
                          "(e.g. batch_boundary, queue_saturation, "
                          "tenant_fairness, fig7, dispatch_overhead,"
                          "telemetry_overhead, latency_tiers, federation, "
-                         "realexec — or "
+                         "chaos_soak, realexec — or "
                          "'dispatch_overhead,telemetry_overhead')")
     ap.add_argument("--quick", action="store_true",
                     help="tiny-size smoke profile: runs only the suites "
@@ -63,6 +63,7 @@ def main() -> None:
     from benchmarks.adaptive_policy import ALL as ADAPTIVE, \
         QUICK as ADAPTIVE_QUICK
     from benchmarks.batch_boundary import ALL as BOUNDARY
+    from benchmarks.chaos_soak import ALL as CHAOS
     from benchmarks.dispatch_overhead import ALL as DISPATCH, \
         QUICK as DISPATCH_QUICK
     from benchmarks.federation import ALL as FEDERATION, \
@@ -75,7 +76,7 @@ def main() -> None:
     from benchmarks.tenant_fairness import ALL as TENANT
 
     everything = PAPER + QUEUE + BOUNDARY + TENANT + DISPATCH \
-        + TELEMETRY + LATENCY + ADAPTIVE + FEDERATION
+        + TELEMETRY + LATENCY + ADAPTIVE + FEDERATION + CHAOS
     if args.quick:
         everything = DISPATCH_QUICK + TELEMETRY_QUICK + ADAPTIVE_QUICK \
             + FEDERATION_QUICK

@@ -23,8 +23,12 @@
 # federation stage — a 3-runtime queued serve with one runtime killed
 # mid-drain, whose metrics must show the failover firing and gossip
 # rounds accruing while every job still reaches a terminal state;
-# stage 8 runs everything else except the slow-marked integration /
-# model-compile tests.
+# stage 8 is the chaos stage — the composed fault drill (2 runtimes,
+# gossip delay on r1 + an executor hang on r0's group + r1 killed
+# outright) run through the chaos-soak harness, whose journals must
+# show every job terminal with zero duplicate completions and whose
+# metrics must show the injections firing; stage 9 runs everything else
+# except the slow-marked integration / model-compile tests.
 # Full suite: `python -m pytest -q`.
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -130,6 +134,43 @@ print(f"federation smoke ok: {rep['jobs']} jobs terminal across "
       f"{rep['runtimes']} runtimes, killed={rep['killed']}, "
       f"recovered={rep['recovered']}, "
       f"gossip_rounds={rep['gossip_rounds']}")
+EOF
+python -m benchmarks.chaos_soak --composed \
+  --journal-dir "$SMOKE_TMP/chaosjournal" \
+  --metrics-out "$SMOKE_TMP/chaos.jsonl" > "$SMOKE_TMP/chaos-report.json"
+python - "$SMOKE_TMP" <<'EOF'
+import json, sys
+from pathlib import Path
+from repro.telemetry import read_jsonl
+tmp = Path(sys.argv[1])
+rep = json.loads((tmp / "chaos-report.json").read_text())
+terminal = rep["done"] + rep["failed"] + rep["cancelled"]
+assert terminal == rep["jobs"], \
+    f"non-terminal jobs after chaos drill: {rep['jobs'] - terminal}"
+assert rep["kills"] == 1, f"kill fault never fired: {rep}"
+# zero duplicate completions across the primaries: the failover replay
+# dedup guard under composed gossip-delay + hang + kill
+done = {}
+for p in (tmp / "chaosjournal").glob("*.journal.jsonl"):
+    for line in p.read_text().splitlines():
+        try:
+            r = json.loads(line)
+        except ValueError:
+            continue            # chaos corruption artifact
+        if r.get("event") == "done":
+            jid = r["job"]["job_id"]
+            done[jid] = done.get(jid, 0) + 1
+dupes = {j: c for j, c in done.items() if c > 1}
+assert not dupes, f"duplicate completions: {dupes}"
+c = read_jsonl(tmp / "chaos.jsonl")[-1]["counters"]
+injected = sum(v for k, v in c.items() if k.startswith("chaos.injected"))
+assert injected >= 3, \
+    f"composed plan under-injected: {injected} of 3 faults " \
+    f"({sorted(k for k in c if k.startswith('chaos'))})"
+assert any(k.startswith("fed.failovers") for k in c), "no failover counted"
+print(f"chaos smoke ok: {rep['jobs']} jobs terminal, "
+      f"{injected:.0f} faults injected, {len(done)} unique completions, "
+      f"dupes=0, recovery_s={rep['recovery_s']:.3f}")
 EOF
 exec python -m pytest -q -m "not slow" \
   --ignore=tests/test_scheduler.py --ignore=tests/test_partitioner.py \

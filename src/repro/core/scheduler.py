@@ -38,7 +38,9 @@ drains a group out everywhere.
 from __future__ import annotations
 
 import collections
+import logging
 import threading
+import traceback
 from dataclasses import dataclass, field
 from typing import Deque, Dict, List, Optional, Tuple, Union
 
@@ -49,6 +51,8 @@ from repro.core.partitioner import HeterogeneousPartitioner
 from repro.core.throughput import ThroughputTracker
 from repro.core.types import ChunkRecord, GroupSpec, IterationSpace, \
     tier_rank
+
+logger = logging.getLogger(__name__)
 
 #: rank sentinel meaning "no runnable epoch": above every real tier rank,
 #: so the preempt check `_preempt_rank < epoch.rank` is always False
@@ -400,6 +404,7 @@ class DynamicScheduler:
         except Exception:
             pass
         idx = start_idx
+        epoch: Optional[EpochHandle] = None
         try:
             while True:
                 epoch = self._await_epoch(name, idx)
@@ -408,8 +413,29 @@ class DynamicScheduler:
                 idx = epoch.index + 1
                 if not self._run_epoch(name, ex, epoch):
                     break                   # group failed: thread retires
+        except BaseException as e:
+            self._dispatcher_guard(name, epoch, e)
         finally:
             self._retire_worker(name)
+
+    def _dispatcher_guard(self, name: str, epoch: Optional["EpochHandle"],
+                          err: BaseException) -> None:
+        """Last-resort handler for a non-ChunkFailure escape from a
+        dispatcher thread: convert it to group death through the normal
+        death path instead of a silent thread exit. Without this a
+        poisoned executor (raising outside the in-band protocol) left
+        the group registered but unserved, so every epoch touching it
+        stalled forever. The traceback lands in the log and telemetry."""
+        tb = traceback.format_exc()
+        logger.error("dispatcher thread for group %r died: %s", name, tb)
+        if name in self.specs:              # not yet marked by _run_epoch
+            self._mark_failed(name, epoch)
+        if self.telemetry is not None:
+            self.telemetry.registry.counter(
+                "sched.dispatcher_errors", group=name).add()
+            self.telemetry.tracer.instant(
+                "dispatcher_error", tid="events", group=name,
+                error=repr(err), traceback=tb[-2000:])
 
     def _best_open_locked(self) -> Optional[EpochHandle]:
         """Best-(tier rank, submission order) open epoch with takeable
@@ -517,7 +543,21 @@ class DynamicScheduler:
                     self._mark_failed(name, epoch)
                     return False
                 except Exception:
-                    self._stamp_tc3(ex.completed(), buf)
+                    # out-of-protocol escape: conserve work like the
+                    # in-band path (requeue the in-flight token and
+                    # whatever the executor can abort) before the raise
+                    # reaches the dispatcher guard — otherwise the epoch
+                    # loses the token's items and never completes
+                    try:
+                        self._stamp_tc3(ex.completed(), buf)
+                    except Exception:
+                        pass
+                    part.requeue(token.chunk, space)
+                    try:
+                        for chunk in ex.abort():
+                            part.requeue(chunk, space)
+                    except Exception:
+                        pass
                     self._finalize(buf, epoch)
                     self._mark_failed(name, epoch)
                     raise
@@ -654,11 +694,15 @@ class DynamicScheduler:
             self.telemetry.registry.gauge("sched.observe_lost_batches") \
                 .set(self._tel_lost)
 
-    def _mark_failed(self, name: str, epoch: EpochHandle) -> None:
-        """In-band group death: exclude it from this and all later epochs."""
+    def _mark_failed(self, name: str,
+                     epoch: Optional[EpochHandle] = None) -> None:
+        """In-band group death: exclude it from this and all later epochs.
+        ``epoch`` is None when death is declared outside any epoch (the
+        dispatcher guard caught an escape between epochs)."""
         with self._cv:
             self._failed.append(name)
-            epoch._failed.append(name)
+            if epoch is not None:
+                epoch._failed.append(name)
             self.specs.pop(name, None)
             self.executors.pop(name, None)
             if self.partitioner is not None:
@@ -667,8 +711,9 @@ class DynamicScheduler:
         if self.telemetry is not None:
             self.telemetry.registry.counter("sched.group_failures",
                                             group=name).add()
-            self.telemetry.tracer.instant("group_failed", tid="events",
-                                          group=name, epoch=epoch.index)
+            self.telemetry.tracer.instant(
+                "group_failed", tid="events", group=name,
+                epoch=epoch.index if epoch is not None else -1)
 
     def _leave_epoch(self, name: str, epoch: EpochHandle) -> None:
         with self._cv:

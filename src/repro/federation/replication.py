@@ -95,3 +95,19 @@ class ReplicationRing:
         if os.path.exists(replica):
             return replica
         return self.journal_path(rid)
+
+    def recovery_sources(self, rid: str) -> List[str]:
+        """Every journal worth consulting for a dead ``rid``, replica
+        first. The two can disagree in both directions: after a mirror
+        detach the replica is a stale prefix of the primary, and after a
+        torn/corrupted primary write the replica holds the true record
+        the primary lost. Failover merges them (terminal verdicts win)
+        instead of trusting either alone."""
+        out: List[str] = []
+        replica = self.replica_path(rid)
+        if os.path.exists(replica):
+            out.append(replica)
+        primary = self.journal_path(rid)
+        if os.path.exists(primary):
+            out.append(primary)
+        return out or [primary]

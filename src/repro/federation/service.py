@@ -24,19 +24,20 @@ metrics (``fed.*``) make them observable the same way.
 """
 from __future__ import annotations
 
+import os
 import threading
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Callable, Dict, List, Optional, Sequence
 
 from repro import telemetry as telemetry_mod
+from repro.chaos.injector import ChaosInjector, ChaosSink
 from repro.federation.gossip import GossipBus, Heartbeat
 from repro.federation.replication import ReplicaSink, ReplicationRing
 from repro.federation.router import Router
 from repro.queue.admission import AdmissionDecision, Decision
 from repro.queue.job import Job, JobState
-from repro.queue.journal import JournalStore
-from repro.queue.service import JobService
+from repro.queue.journal import JournalStore, _entry_line
 
 clock = time.monotonic
 
@@ -88,12 +89,16 @@ class FederatedService:
                  vnodes: int = 64,
                  max_deferred: int = 10_000,
                  spread_after: int = 32,
-                 auto_compact_lines: Optional[int] = None):
+                 auto_compact_lines: Optional[int] = None,
+                 chaos: Optional[ChaosInjector] = None):
         """``make_service(runtime_id, journal, telemetry) -> JobService``
         builds one runtime (scheduler factory, queue, admission wired by
         the caller); the federation owns journals + replication + the
         per-runtime telemetry namespace. ``tenants`` is a duck-typed
-        TenantRegistry enabling the global quota / energy-budget tier."""
+        TenantRegistry enabling the global quota / energy-budget tier.
+        ``chaos`` attaches a fault-injection plane (repro.chaos): journal
+        write filters, mirror-failure sinks, gossip drop/delay/partition,
+        and plan-scheduled runtime kills, all executed here."""
         if not runtime_ids:
             raise ValueError("federation needs at least one runtime")
         self.tenants = tenants
@@ -121,12 +126,20 @@ class FederatedService:
         self._stop_evt = threading.Event()
         self._hb_thread: Optional[threading.Thread] = None
         self._t0: Optional[float] = None
+        self._chaos = chaos
+        # kill_runtime is serialized: two concurrent kills may otherwise
+        # each pick the other as survivor mid-crash and replay into a
+        # runtime that is already dying, losing the replayed jobs
+        self._kill_lock = threading.Lock()
 
         self._nodes: Dict[str, RuntimeNode] = {}
         for rid in runtime_ids:
-            journal = JournalStore(self.ring.journal_path(rid),
-                                   auto_compact_lines=auto_compact_lines)
-            sink = self.ring.make_sink(rid)
+            journal = JournalStore(
+                self.ring.journal_path(rid),
+                auto_compact_lines=auto_compact_lines,
+                write_filter=chaos.journal_write_filter(rid)
+                if chaos is not None else None)
+            sink = self._wrap_sink(self.ring.make_sink(rid), rid)
             journal.attach_mirror(sink)
             tel_arg = self.telemetry.labeled(runtime=rid) \
                 if self.telemetry is not None else telemetry_mod.OFF
@@ -140,6 +153,13 @@ class FederatedService:
             if adm is not None \
                     and getattr(adm, "global_unfinished", None) is None:
                 adm.global_unfinished = self.global_unfinished
+
+    def _wrap_sink(self, sink: ReplicaSink, rid: str):
+        """Replica sinks pass through the chaos plane when one is
+        attached, so ``mirror_fail`` windows hit mirror writes."""
+        if self._chaos is None:
+            return sink
+        return ChaosSink(sink, rid, self._chaos)
 
     # -- telemetry ------------------------------------------------------
     def _counter(self, name: str, **labels):
@@ -303,15 +323,40 @@ class FederatedService:
     def gossip_round(self) -> None:
         """One heartbeat exchange: every live runtime publishes, the
         router refreshes stale-derated capacities, global energy budgets
-        re-derate DWRR weights, and the globally-deferred pool re-gates."""
+        re-derate DWRR weights, and the globally-deferred pool re-gates.
+        With a chaos plane attached this is also where its federation
+        faults execute: plan-scheduled kills fire here, a runtime inside
+        a ``gossip_drop``/``partition`` window publishes nothing (the
+        bus's stale derate takes over), a ``gossip_delay`` window lags
+        the heartbeat timestamp by ``magnitude`` seconds, and mirrors
+        detached during a ``mirror_fail`` window are re-synced once the
+        window has passed."""
         now = self.bus.clock()
+        chaos = self._chaos
+        if chaos is not None:
+            for rid in chaos.take_kills(
+                    [n.runtime_id for n in self.alive_nodes()]):
+                self.kill_runtime(rid)
         for node in self.alive_nodes():
-            self.bus.publish(self._heartbeat(node))
+            if chaos is not None and (
+                    chaos.active("federation", "gossip_drop",
+                                 node.runtime_id) is not None
+                    or chaos.active("federation", "partition",
+                                    node.runtime_id) is not None):
+                continue    # heartbeat lost; routed_items correction
+            hb = self._heartbeat(node)      # stays banked for later
+            if chaos is not None:
+                ev = chaos.active("federation", "gossip_delay",
+                                  node.runtime_id)
+                if ev is not None and ev.magnitude > 0.0:
+                    hb = replace(hb, ts=hb.ts - ev.magnitude)
+            self.bus.publish(hb)
             with self._lock:
                 # the heartbeat just captured this queue's state; the
                 # un-gossiped correction window restarts
                 node.routed_items = 0.0
                 node.pending_jobs.clear()
+        self._heal_mirrors()
         for node in self.alive_nodes():
             self.router.set_capacity(
                 node.runtime_id,
@@ -322,6 +367,33 @@ class FederatedService:
             self.telemetry.registry.gauge("fed.runtimes_alive") \
                 .set(len(self.alive_nodes()))
         self.retry_deferred()
+
+    def _heal_mirrors(self) -> None:
+        """Re-attach replication for any journal whose mirror detached
+        (a sink write error — under chaos, a ``mirror_fail`` window).
+        Detachment is the journal's self-protection, but a runtime
+        running unmirrored is a replication gap: a later kill would lose
+        whatever the replica missed. Healing rewrites a fresh sink from
+        the primary's current per-job state and resumes forwarding; the
+        heal is skipped while the fault window is still open (it would
+        just detach again)."""
+        for node in self.alive_nodes():
+            if node.journal.has_mirror():
+                continue
+            if self._chaos is not None and self._chaos.active(
+                    "federation", "mirror_fail",
+                    node.runtime_id) is not None:
+                continue
+            node.sink.close()
+            sink = self._wrap_sink(
+                self.ring.make_sink(node.runtime_id), node.runtime_id)
+            try:
+                node.journal.resync_mirror(sink)
+            except Exception:       # window raced the resync; next round
+                sink.close()
+                continue
+            node.sink = sink
+            self._count("fed.mirror_resyncs", runtime=node.runtime_id)
 
     def _apply_energy_budgets(self) -> None:
         """Global energy enforcement: a tenant's fleet-wide attributed
@@ -351,37 +423,76 @@ class FederatedService:
     # -- failure / handoff ----------------------------------------------
     def kill_runtime(self, rid: str) -> List[Job]:
         """Crash one runtime (unclean: in-flight batches die un-finalized)
-        and fail its work over: the ring replica of its journal replays
+        and fail its work over: the victim's replica and primary journals
+        are merged (terminal verdicts win — a replica that is a stale
+        prefix must not resurrect a finished job, and a primary whose
+        final write was torn must not lose one) and the merge replays
         through a survivor's ``recover`` — RUNNING rewinds to REQUEUED,
         queued jobs re-enter a live queue, PENDING re-gates — conserving
-        deadline/tier metadata, deduplicated by job id. Returns the
-        re-materialized jobs (empty when no survivor remains)."""
-        node = self._nodes[rid]
-        if not node.alive:
-            return []
-        node.alive = False
-        self._killed.append(rid)
-        self.router.remove_runtime(rid)
-        self.bus.drop(rid)
-        with self._lock:
-            node.routed_items = 0.0
-            node.pending_jobs.clear()
-        node.service.crash()
-        node.journal.close()
-        node.sink.close()
-        self._count("fed.failovers")
-        survivor = self._survivor_for(rid)
-        if survivor is None:
-            return []
-        recovered = survivor.service.recover(self.ring.recovery_source(rid))
-        with self._lock:
-            for job in recovered:
-                self._jobs[job.job_id] = job
-                self._placement[job.job_id] = survivor.runtime_id
-            self.recovered += len(recovered)
-        self._count("fed.recovered_jobs", len(recovered),
-                    runtime=survivor.runtime_id)
-        return recovered
+        deadline/tier metadata, deduplicated by job id. Kills are
+        serialized (``_kill_lock``): two racing kills could otherwise
+        each pick the other as survivor mid-crash and replay into a
+        dying runtime. Returns the re-materialized jobs (empty when no
+        survivor remains)."""
+        with self._kill_lock:
+            node = self._nodes[rid]
+            if not node.alive:
+                return []
+            node.alive = False
+            self._killed.append(rid)
+            self.router.remove_runtime(rid)
+            self.bus.drop(rid)
+            with self._lock:
+                node.routed_items = 0.0
+                node.pending_jobs.clear()
+            node.service.crash()
+            if self._chaos is not None and self._chaos.take(
+                    "journal", "torn_write", rid) is not None:
+                node.journal.tear_tail()
+            node.journal.close()
+            node.sink.close()
+            self._count("fed.failovers")
+            survivor = self._survivor_for(rid)
+            if survivor is None:
+                return []
+            recovered = survivor.service.recover(
+                self._merged_recovery_source(rid))
+            with self._lock:
+                for job in recovered:
+                    self._jobs[job.job_id] = job
+                    self._placement[job.job_id] = survivor.runtime_id
+                self.recovered += len(recovered)
+            self._count("fed.recovered_jobs", len(recovered),
+                        runtime=survivor.runtime_id)
+            return recovered
+
+    def _merged_recovery_source(self, rid: str) -> str:
+        """Merge every recovery source for ``rid`` into one replayable
+        journal. Sources are consulted replica-then-primary with
+        later-source-wins per job — the primary is the newer view when
+        both parsed — EXCEPT that a terminal verdict from any source
+        sticks: the one unsafe disagreement is a stale non-terminal
+        record shadowing a DONE/FAILED/CANCELLED one, which would requeue
+        (and re-execute) a job that already finished."""
+        sources = self.ring.recovery_sources(rid)
+        if len(sources) == 1:
+            return sources[0]
+        merged: Dict[str, Job] = {}
+        order: List[str] = []
+        for path in sources:
+            for jid, job in JournalStore.replay(path).items():
+                cur = merged.get(jid)
+                if cur is None:
+                    merged[jid] = job
+                    order.append(jid)
+                elif not cur.terminal:
+                    merged[jid] = job
+        out = os.path.join(self.ring.directory, f"{rid}.recovery.jsonl")
+        with open(out, "w", encoding="utf-8") as fh:
+            for jid in order:
+                fh.write(_entry_line(merged[jid],
+                                     merged[jid].state.value) + "\n")
+        return out
 
     def _survivor_for(self, rid: str) -> Optional[RuntimeNode]:
         """The victim's ring peer, walking past peers that are themselves
@@ -402,6 +513,8 @@ class FederatedService:
             return
         self._started = True
         self._t0 = clock()
+        if self._chaos is not None:
+            self._chaos.start()     # fault clock origin = fleet start
         for node in self.alive_nodes():
             node.service.start()
         self.gossip_round()            # seed the router before any wait

@@ -160,6 +160,17 @@ def main():
     ap.add_argument("--journal-dir", default=None,
                     help="directory for federated journals + replicas "
                          "(default: a fresh temp dir)")
+    ap.add_argument("--chaos-seed", type=int, default=None,
+                    help="fault injection (--runtimes > 1): generate a "
+                         "deterministic randomized FaultPlan from this "
+                         "seed (same seed => identical fault schedule)")
+    ap.add_argument("--chaos-plan", default=None,
+                    help="fault injection: an explicit FaultPlan (JSON "
+                         "string or path); mutually exclusive with "
+                         "--chaos-seed")
+    ap.add_argument("--chaos-horizon-s", type=float, default=2.0,
+                    help="horizon seconds for a --chaos-seed generated "
+                         "plan")
     args = ap.parse_args()
     if args.runtimes < 1:
         ap.error("--runtimes must be >= 1")
@@ -169,6 +180,11 @@ def main():
             not 0 <= args.kill_runtime < args.runtimes:
         ap.error("--kill-runtime must name a runtime in "
                  f"[0, {args.runtimes})")
+    if args.chaos_seed is not None and args.chaos_plan is not None:
+        ap.error("--chaos-seed and --chaos-plan are mutually exclusive")
+    if (args.chaos_seed is not None or args.chaos_plan is not None) \
+            and args.runtimes < 2:
+        ap.error("--chaos-seed/--chaos-plan require --runtimes >= 2")
     if args.job_items < 1:
         ap.error("--job-items must be >= 1")
     if args.deadline_ms is not None and args.deadline_ms <= 0:
@@ -263,7 +279,9 @@ def _run(args, ap, eng, groups, registry, energy_model):
                 batch_jobs=args.batch_jobs, journal_dir=args.journal_dir,
                 pipeline_depth=args.pipeline_depth, tenants=registry,
                 energy_model=energy_model, express=not args.no_express,
-                kill_runtime=args.kill_runtime)
+                kill_runtime=args.kill_runtime,
+                chaos_seed=args.chaos_seed, chaos_plan=args.chaos_plan,
+                chaos_horizon_s=args.chaos_horizon_s)
             fed = frep.fed
             out = {
                 "runtimes": fed.runtimes, "alive": fed.alive,

@@ -45,7 +45,8 @@ class JobState(str, Enum):
 
 #: legal state graph; anything not listed raises IllegalTransition.
 TRANSITIONS: Dict[JobState, frozenset] = {
-    JobState.PENDING: frozenset({JobState.ADMITTED, JobState.CANCELLED}),
+    JobState.PENDING: frozenset({JobState.ADMITTED, JobState.FAILED,
+                                 JobState.CANCELLED}),
     JobState.ADMITTED: frozenset({JobState.RUNNING, JobState.CANCELLED}),
     JobState.RUNNING: frozenset({JobState.DONE, JobState.FAILED,
                                  JobState.REQUEUED, JobState.CANCELLED}),

@@ -1,10 +1,16 @@
 """Append-only JSONL journal: durability + crash recovery for the queue.
 
-Every state transition appends one line ``{"ts", "event", "job"}``; the
-file is the source of truth after a crash. Replay is last-write-wins per
-job id; a torn final line (the classic crash-mid-write artifact) is
-skipped, matching what GPUScheduler's sqliteStore gets from SQLite's
-atomic commits — but with zero dependencies and human-greppable storage.
+Every state transition appends one line ``{"ts", "event", "job", "crc"}``
+where ``crc`` is the CRC-32 of the canonical (sorted-keys) JSON of the
+other three fields; the file is the source of truth after a crash.
+Replay is last-write-wins per job id, with two hardening layers flushed
+out by the chaos soak:
+
+  * a torn final line (crash mid-write) is *truncated on open* — the
+    classic artifact must not poison the next process's appends by
+    gluing its first record onto the fragment; and
+  * a line whose checksum does not match (bit rot, a corrupted flush)
+    is skipped and counted, never trusted.
 
 ``recover()`` re-materializes the queue: jobs that were in flight
 (ADMITTED / RUNNING / PENDING / REQUEUED) when the process died come back
@@ -17,30 +23,61 @@ import logging
 import os
 import threading
 import time
-from typing import Dict, List, Optional, Tuple
+import zlib
+from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.queue.job import Job, JobState
 
 logger = logging.getLogger(__name__)
 
-_TRUNCATE_SENTINEL = object()
+# how far back from EOF we look for the last newline when truncating a
+# torn tail; a journal line is well under this
+_TAIL_SCAN_BYTES = 65536
+
+
+def _entry_line(job: Job, event: str, ts: Optional[float] = None) -> str:
+    """One canonical journal line, checksum included.
+
+    The crc covers the sorted-keys JSON of the payload *without* the crc
+    field, so verification is: pop "crc", re-dump sorted, compare.
+    (json round-trips float repr exactly, so re-dumping a parsed payload
+    reproduces the original bytes.)
+    """
+    payload = {"ts": time.time() if ts is None else ts,
+               "event": event, "job": job.to_dict()}
+    body = json.dumps(payload, sort_keys=True)
+    payload["crc"] = zlib.crc32(body.encode("utf-8")) & 0xFFFFFFFF
+    return json.dumps(payload, sort_keys=True)
 
 
 class JournalStore:
     def __init__(self, path: str, fsync: bool = False,
-                 auto_compact_lines: Optional[int] = None):
+                 auto_compact_lines: Optional[int] = None,
+                 write_filter: Optional[Callable[[str],
+                                                Optional[str]]] = None):
         """``auto_compact_lines``: when set, record() triggers compact()
         once the journal holds at least that many lines — a long-lived
         daemon's journal stays O(live+finished jobs) instead of O(state
-        transitions) with no operator cron job. None disables it."""
+        transitions) with no operator cron job. None disables it.
+
+        ``write_filter``: fault-injection seam (repro.chaos). Called with
+        each canonical line; a non-None return is written to the primary
+        file *verbatim* in its place (torn / corrupted bytes). The mirror
+        always receives the true line — the filter models a bad local
+        disk, not a bad wire.
+        """
         self.path = str(path)
         self.fsync = fsync
         self.auto_compact_lines = auto_compact_lines
         self.compactions = 0                 # observability / tests
+        self.torn_truncations = 0            # torn tails cut on open
+        self.mirror_detaches = 0             # sinks dropped on write error
+        self._write_filter = write_filter
         self._lock = threading.Lock()
         directory = os.path.dirname(self.path)
         if directory:
             os.makedirs(directory, exist_ok=True)
+        self._truncate_torn_tail()
         self._lines = 0
         # the line count only feeds the auto-compaction trigger; don't
         # pay an O(journal) scan on open when the feature is off
@@ -54,6 +91,34 @@ class JournalStore:
         self._mirror = None
         self._fh = open(self.path, "a", encoding="utf-8")
 
+    def _truncate_torn_tail(self) -> None:
+        """Cut an unterminated final line before opening for append.
+
+        A crash mid-write leaves a fragment with no trailing newline;
+        appending after it would weld the next record onto the fragment
+        and lose *that* record too. Truncating back to the last newline
+        confines the damage to the torn line itself.
+        """
+        if not os.path.exists(self.path):
+            return
+        with open(self.path, "rb+") as fh:
+            fh.seek(0, os.SEEK_END)
+            size = fh.tell()
+            if size == 0:
+                return
+            fh.seek(size - 1)
+            if fh.read(1) == b"\n":
+                return
+            scan = min(size, _TAIL_SCAN_BYTES)
+            fh.seek(size - scan)
+            tail = fh.read(scan)
+            cut = tail.rfind(b"\n")
+            keep = size - scan + cut + 1 if cut >= 0 else 0
+            fh.truncate(keep)
+        self.torn_truncations += 1
+        logger.warning("journal %s: truncated torn final line "
+                       "(%d bytes dropped)", self.path, size - keep)
+
     # -- replication ---------------------------------------------------
     def attach_mirror(self, mirror) -> None:
         """Attach a replication sink (duck-typed: ``append(line)`` plus
@@ -64,6 +129,23 @@ class JournalStore:
         detached rather than taking journaling (and the drain daemon
         above it) down."""
         self._mirror = mirror
+
+    def has_mirror(self) -> bool:
+        return self._mirror is not None
+
+    def resync_mirror(self, mirror) -> int:
+        """Re-attach a (replacement) sink after a detach: rewrite it from
+        the primary's current per-job final state so it again holds a
+        replayable copy, then resume forwarding. Returns lines synced."""
+        with self._lock:
+            jobs = self.replay(self.path)
+            lines = [_entry_line(j, j.state.value)
+                     for j in sorted(jobs.values(),
+                                     key=lambda j: (j.created_at,
+                                                    j.job_id))]
+            mirror.rewrite(lines)
+            self._mirror = mirror
+            return len(lines)
 
     def _mirror_call(self, method: str, arg) -> None:
         mirror = self._mirror
@@ -77,14 +159,16 @@ class JournalStore:
         except Exception:
             logger.exception("journal mirror %s failed; detaching", method)
             self._mirror = None
+            self.mirror_detaches += 1
 
     # -- write path ----------------------------------------------------
     def record(self, job: Job, event: Optional[str] = None) -> None:
-        line = json.dumps({"ts": time.time(),
-                           "event": event or job.state.value,
-                           "job": job.to_dict()}, sort_keys=True)
+        line = _entry_line(job, event or job.state.value)
+        out = None
+        if self._write_filter is not None:
+            out = self._write_filter(line)
         with self._lock:
-            self._fh.write(line + "\n")
+            self._fh.write(line + "\n" if out is None else out)
             self._fh.flush()
             if self.fsync:
                 os.fsync(self._fh.fileno())
@@ -105,6 +189,14 @@ class JournalStore:
                                  "disabling the trigger")
                 with self._lock:
                     self._next_compact = None
+
+    def tear_tail(self) -> None:
+        """Simulate a crash mid-write: append a partial record with no
+        trailing newline (fault-injection hook used by ``kill_runtime``
+        under a ``torn_write`` event). The next open truncates it."""
+        with self._lock:
+            self._fh.write('{"ts": 0, "event": "torn')
+            self._fh.flush()
 
     def close(self) -> None:
         with self._lock:
@@ -129,12 +221,10 @@ class JournalStore:
                 self._fh.close()
             try:
                 jobs = self.replay(self.path)
-                lines = [json.dumps(
-                    {"ts": time.time(), "event": job.state.value,
-                     "job": job.to_dict()}, sort_keys=True)
-                    for job in sorted(jobs.values(),
-                                      key=lambda j: (j.created_at,
-                                                     j.job_id))]
+                lines = [_entry_line(job, job.state.value)
+                         for job in sorted(jobs.values(),
+                                           key=lambda j: (j.created_at,
+                                                          j.job_id))]
                 tmp = self.path + ".compact"
                 with open(tmp, "w", encoding="utf-8") as fh:
                     for line in lines:
@@ -161,27 +251,57 @@ class JournalStore:
 
     # -- read path -----------------------------------------------------
     @classmethod
-    def replay(cls, path: str) -> Dict[str, Job]:
-        """Reconstruct the final state of every journaled job.
+    def replay_stats(cls, path: str) \
+            -> Tuple[Dict[str, Job], Dict[str, int]]:
+        """replay() plus integrity counters.
 
-        Corrupt / torn lines are skipped, not fatal: an append-only log's
-        only legal corruption is a truncated tail.
+        Returns ``(jobs, {"lines", "skipped", "crc_failures"})``.
+        ``skipped`` counts every rejected line (unparseable or bad
+        checksum); ``crc_failures`` counts the subset that parsed but
+        failed verification. Lines without a "crc" field (journals from
+        before checksumming) are accepted as-is.
         """
         jobs: Dict[str, Job] = {}
+        stats = {"lines": 0, "skipped": 0, "crc_failures": 0}
         if not os.path.exists(path):
-            return jobs
+            return jobs, stats
         with open(path, "r", encoding="utf-8") as fh:
             for raw in fh:
                 raw = raw.strip()
                 if not raw:
                     continue
+                stats["lines"] += 1
                 try:
                     entry = json.loads(raw)
+                    crc = entry.pop("crc", None)
+                    if crc is not None:
+                        body = json.dumps(entry, sort_keys=True)
+                        if zlib.crc32(body.encode("utf-8")) \
+                                & 0xFFFFFFFF != crc:
+                            stats["crc_failures"] += 1
+                            raise ValueError("journal crc mismatch")
                     job = Job.from_dict(entry["job"])
                 except (json.JSONDecodeError, KeyError, TypeError,
-                        ValueError):
+                        ValueError, AttributeError):
+                    stats["skipped"] += 1
                     continue
                 jobs[job.job_id] = job
+        if stats["skipped"]:
+            logger.warning(
+                "journal %s: skipped %d corrupt line(s) of %d "
+                "(%d checksum failure(s))", path, stats["skipped"],
+                stats["lines"], stats["crc_failures"])
+        return jobs, stats
+
+    @classmethod
+    def replay(cls, path: str) -> Dict[str, Job]:
+        """Reconstruct the final state of every journaled job.
+
+        Corrupt / torn lines are skipped, not fatal: an append-only log's
+        only legal corruption is a truncated tail or a bad flush, and
+        checksums catch the latter.
+        """
+        jobs, _ = cls.replay_stats(path)
         return jobs
 
     @classmethod

@@ -34,6 +34,7 @@ from __future__ import annotations
 import collections
 import logging
 import math
+import random
 import threading
 import time
 from dataclasses import dataclass, field
@@ -210,7 +211,11 @@ class JobService:
                  telemetry=None, express: bool = True,
                  express_slots: int = 1, clock=None, sleep=None,
                  fallback_s: float = 2.0,
-                 health_poll_s: Optional[float] = None):
+                 health_poll_s: Optional[float] = None,
+                 retry_budget: int = 20, retry_base_s: float = 0.02,
+                 retry_max_s: float = 1.0,
+                 brownout_factor: Optional[float] = None,
+                 brownout_after_s: float = 1.0):
         self.make_scheduler = make_scheduler
         # monotonic clock / sleep seams for the deterministic test
         # harness; the ctor arg shadows the module global, hence the
@@ -257,6 +262,24 @@ class JobService:
         # each poll, so an unbounded pool is both a memory leak and O(n)
         # lock-held work per loop — beyond the cap, DEFER becomes REJECT
         self.max_deferred = max_deferred
+        # bounded deferred-retry policy: each re-offer that DEFERs again
+        # backs off exponentially (base * 2^n, capped, jittered so a
+        # burst of deferrals doesn't re-offer in lockstep); after
+        # ``retry_budget`` failed re-offers the job goes terminal FAILED
+        # instead of looping forever against a gate that will never open
+        self.retry_budget = max(1, retry_budget)
+        self.retry_base_s = retry_base_s
+        self.retry_max_s = retry_max_s
+        self._retry_rng = random.Random(0xC0FFEE)   # jitter only; seeded
+        self._retry_at: Dict[str, float] = {}       # job_id -> eligible at
+        # graceful brownout: when admission's projected delay exceeds
+        # ``brownout_factor × slo`` continuously for ``brownout_after_s``,
+        # shed queued batch-tier work; another sustained interval sheds
+        # standard; urgent is shed last. None disables the controller.
+        self.brownout_factor = brownout_factor
+        self.brownout_after_s = brownout_after_s
+        self._brownout_since: Optional[float] = None
+        self._brownout_level = 0
         self.stats = ServiceStats()
         self._deferred: List[Job] = []
         # job ids already replayed by recover(): a journal recovered twice
@@ -349,25 +372,134 @@ class JobService:
         return dec
 
     def retry_deferred(self) -> int:
-        """Re-offer deferred jobs to the admission gate; returns #admitted."""
+        """Re-offer deferred jobs to the admission gate; returns #admitted.
+
+        Bounded: a job is re-offered only once its backoff window has
+        passed (first retry immediately; each further DEFER doubles the
+        wait, capped at ``retry_max_s`` and jittered ±50 % so deferred
+        floods don't re-offer in lockstep). A job whose ``retry_budget``
+        is exhausted goes terminal FAILED — unbounded immediate retry
+        against a gate that never opens was both a livelock and O(pool)
+        lock-held work per poll.
+        """
         if self.admission is None:
             return 0
+        now = self.clock()
         with self._lock:
             waiting, self._deferred = self._deferred, []
+        if waiting and self._sched is not None \
+                and not self._sched.live_groups():
+            # every group died while the backlog sat deferred: with
+            # nothing queued, no batch start will rebuild the runtime,
+            # admission capacity stays pinned at min_capacity, and the
+            # re-offer loop would burn its whole retry budget against a
+            # gate that can never open — rebuild before re-offering
+            self._scheduler()
         admitted = 0
+        still: List[Job] = []
         for job in waiting:
             if job.state != JobState.PENDING:      # cancelled while waiting
+                self._retry_at.pop(job.job_id, None)
+                continue
+            if self._retry_at.get(job.job_id, -math.inf) > now:
+                still.append(job)                  # backoff not elapsed
                 continue
             dec = self.admission.admit(job)
-            if dec.decision == Decision.DEFER:
-                with self._lock:
-                    self._deferred.append(job)
-            else:
+            if dec.decision != Decision.DEFER:
+                self._retry_at.pop(job.job_id, None)
                 self._journal(job)
                 admitted += dec.decision == Decision.ADMIT
+                continue
+            n = int(job.meta.get("retries", 0)) + 1
+            job.meta["retries"] = n
+            if self.telemetry is not None:
+                self._counter("svc.retries", cause="deferred").add(1)
+            if n >= self.retry_budget:
+                job.meta["failure"] = \
+                    f"deferred retry budget exhausted ({n})"
+                job.transition(JobState.FAILED)
+                self.admission.shed_deferred(job)
+                self.stats.failed += 1
+                self._retry_at.pop(job.job_id, None)
+                self._journal(job, "retry-exhausted")
+                if self.telemetry is not None:
+                    self._counter("svc.retries", cause="exhausted").add(1)
+                continue
+            back = min(self.retry_max_s,
+                       self.retry_base_s * (2 ** (n - 1)))
+            back *= 0.5 + self._retry_rng.random()
+            self._retry_at[job.job_id] = now + back
+            still.append(job)
+        if still:
+            with self._lock:
+                self._deferred.extend(still)
         if admitted:
             self.wakeup.notify()
         return admitted
+
+    # -- brownout (graceful overload shedding) -------------------------
+    def _shed_tier(self, tier: str) -> int:
+        """Cancel every queued (ADMITTED) job of one tier. In-flight
+        batches are left to finish — brownout sheds *waiting* load."""
+        shed = 0
+        try:
+            queued = self.queue.jobs(state=JobState.ADMITTED)
+        except TypeError:               # duck-typed queue without filter
+            queued = [j for j in self.queue.jobs()
+                      if j.state == JobState.ADMITTED]
+        for j in queued:
+            if j.tier != tier:
+                continue
+            if not self.queue.cancel(j.job_id):
+                continue
+            j.meta["brownout"] = True
+            self._journal(j, "brownout-shed")
+            shed += 1
+        if shed and self.telemetry is not None:
+            self._counter("svc.brownout", tier=tier).add(shed)
+        return shed
+
+    def _check_brownout(self) -> None:
+        """Overload controller: sustained projected delay beyond
+        ``brownout_factor × slo`` sheds queued tiers lowest-value-first
+        (batch → standard → urgent), one tier per sustained
+        ``brownout_after_s`` interval; recovery (delay back within slo)
+        resets fully. ``svc.brownout{tier=}`` counts shed jobs and the
+        ``svc.brownout_level`` gauge exposes the current level."""
+        if self.admission is None or self.brownout_factor is None:
+            return
+        slo = getattr(self.admission, "slo_delay_s", math.inf)
+        if not math.isfinite(slo):
+            return
+        now = self.clock()
+        delay = self.admission.projected_delay_s()
+        if delay > self.brownout_factor * slo:
+            if self._brownout_since is None:
+                self._brownout_since = now
+            level = min(len(TIERS), int((now - self._brownout_since)
+                                        / self.brownout_after_s))
+            while self._brownout_level < level:
+                # shed lowest-value first: batch, then standard, urgent
+                tier = TIERS[len(TIERS) - 1 - self._brownout_level]
+                n = self._shed_tier(tier)
+                self._brownout_level += 1
+                logger.warning("brownout level %d: shed %d %s-tier "
+                               "job(s) (projected delay %.3fs, slo "
+                               "%.3fs)", self._brownout_level, n, tier,
+                               delay, slo)
+                if self.telemetry is not None:
+                    self.telemetry.tracer.instant(
+                        "brownout", tid="service",
+                        level=self._brownout_level, tier=tier, shed=n)
+        elif delay <= slo and self._brownout_level:
+            logger.info("brownout cleared (projected delay %.3fs)", delay)
+            self._brownout_level = 0
+            self._brownout_since = None
+        elif delay <= slo:
+            self._brownout_since = None
+        if self.telemetry is not None:
+            self.telemetry.registry.gauge("svc.brownout_level") \
+                .set(self._brownout_level)
 
     # -- replay-driven restart -----------------------------------------
     def recover(self, journal_path: str) -> List[Job]:
@@ -421,11 +553,32 @@ class JobService:
         s = self._sched
         if s is not None and s.live_groups():
             return s
+        rebuilt = s is not None
         if s is not None:
             s.shutdown()
         s = self.make_scheduler()
         s.start()
         self._sched = s
+        if rebuilt:
+            # the factory brings the same group names back: clear the
+            # watchdog's sticky dead verdicts and restore admission
+            # capacity for groups whose death was observed (without this
+            # the rebuilt runtime serves at zero advertised capacity and
+            # one hang per group name is terminal for the service)
+            for g in s.live_groups():
+                if self.watchdog is not None:
+                    self.watchdog.revive(g)
+                if self.admission is not None \
+                        and g not in self.admission.groups():
+                    # rejoin at the λ-tracker's estimate (measurement or
+                    # seed), not a blind 1.0: if the group died before
+                    # its first chunk completed, a 1.0 seed projects a
+                    # huge delay, every deferred re-offer re-defers,
+                    # nothing queues, and λ can never be measured — a
+                    # deadlock broken only by retry-budget exhaustion
+                    tracker = getattr(s, "tracker", None)
+                    lam = tracker.get(g) if tracker is not None else 1.0
+                    self.admission.on_group_join(g, lam)
         return s
 
     def scheduler(self) -> Optional[DynamicScheduler]:
@@ -646,6 +799,9 @@ class JobService:
                 self.queue.mark_finished(j, JobState.REQUEUED)
                 self.queue.requeue(j)
                 self.stats.requeues += 1
+                if tel is not None:
+                    self._counter("svc.retries",
+                                  cause="batch_failure").add(1)
                 state = "requeued"
             else:
                 self.queue.mark_finished(j, JobState.FAILED)
@@ -769,6 +925,7 @@ class JobService:
         while self.clock() < deadline:
             self.retry_deferred()
             self._poll_health()
+            self._check_brownout()
             if self._pump(block_s=0.0):
                 continue
             if not self._inflight:
@@ -876,6 +1033,7 @@ class JobService:
         while not self._stop.is_set():
             self.retry_deferred()
             self._poll_health()
+            self._check_brownout()
             if self._pump(block_s=0.0):
                 continue
             self._wait_for_work()

@@ -51,6 +51,15 @@ class Watchdog:
             h.last_heartbeat = self.clock()
             h.outstanding_since = None
 
+    def revive(self, group: str) -> None:
+        """Forget a group's dead verdict (its runtime was rebuilt from
+        the factory). The dead flag is sticky by design — check() must
+        not re-report a hang every poll — so a rebuild that brings the
+        same group names back must clear it, or the fresh group would be
+        condemned by its predecessor's hang."""
+        with self._lock:
+            self._health.pop(group, None)
+
     def check(self) -> List[str]:
         """Returns groups newly declared dead."""
         now = self.clock()

@@ -9,10 +9,11 @@ generated tokens / wall time, which feeds eq. (4) exactly like training.
 """
 from __future__ import annotations
 
+import os
 import tempfile
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -200,11 +201,14 @@ class HeteroServeEngine:
     def _build_scheduler(self, max_chunk: Optional[int] = None,
                          exclude: Optional[set] = None,
                          namespace: str = "",
-                         telemetry=None) -> DynamicScheduler:
+                         telemetry=None,
+                         wrap_executor: Optional[Callable] = None) \
+            -> DynamicScheduler:
         """``namespace`` prefixes every group name (federation: runtime
         ``r1``'s accel group is ``r1/accel``), so per-runtime schedulers
         get private executors, distinct trace tracks, and unambiguous
-        dead-group exclusion."""
+        dead-group exclusion. ``wrap_executor(name, ex)`` decorates each
+        group's executor (the chaos plane's injection point)."""
         specs, execs = {}, {}
         for g in self.groups:
             name = namespace + g.name
@@ -214,7 +218,10 @@ class HeteroServeEngine:
                                     fixed_chunk=g.fixed_chunk,
                                     min_chunk=1, max_chunk=max_chunk,
                                     init_throughput=1.0)
-            execs[name] = self._executor_for(g, namespace)
+            ex = self._executor_for(g, namespace)
+            if wrap_executor is not None:
+                ex = wrap_executor(name, ex)
+            execs[name] = ex
         if not specs:
             raise RuntimeError("no live device groups")
         return DynamicScheduler(specs, execs, alpha=self.alpha,
@@ -389,7 +396,10 @@ class HeteroServeEngine:
                              express: bool = True,
                              heartbeat_s: float = 0.1,
                              kill_runtime: Optional[int] = None,
-                             kill_after_frac: float = 0.5) \
+                             kill_after_frac: float = 0.5,
+                             chaos_seed: Optional[int] = None,
+                             chaos_plan: Optional[str] = None,
+                             chaos_horizon_s: float = 2.0) \
             -> "FederatedServeReport":
         """Serve jobs through a ``FederatedService``: ``runtimes``
         independent JobService runtimes — each with its own persistent
@@ -401,11 +411,34 @@ class HeteroServeEngine:
         ``kill_runtime=K`` crashes runtime ``rK`` once ``kill_after_frac``
         of the jobs are done (failure drill: its replica replays onto a
         survivor; the report's ``recovered`` counts the requeued jobs).
+
+        Chaos plane: ``chaos_seed`` generates a deterministic randomized
+        ``FaultPlan`` over ``chaos_horizon_s`` seconds (same seed ⇒ same
+        schedule); ``chaos_plan`` instead loads an explicit plan (a JSON
+        string or a path to one). Executor faults wrap every group's
+        executor; journal/federation faults are executed by the
+        federation tier.
         """
+        from repro.chaos import ChaosExecutor, ChaosInjector, FaultPlan
         from repro.federation import FederatedService
         if journal_dir is None:
             journal_dir = tempfile.mkdtemp(prefix="repro-fed-")
         rids = [f"r{i}" for i in range(max(1, runtimes))]
+
+        chaos = None
+        if chaos_plan is not None or chaos_seed is not None:
+            if chaos_plan is not None:
+                text = chaos_plan
+                if os.path.exists(chaos_plan):
+                    with open(chaos_plan, "r", encoding="utf-8") as fh:
+                        text = fh.read()
+                plan = FaultPlan.from_json(text)
+            else:
+                plan = FaultPlan.generate(
+                    chaos_seed, chaos_horizon_s, rids,
+                    [f"{rid}/{g.name}" for rid in rids
+                     for g in self.groups])
+            chaos = ChaosInjector(plan, telemetry=self._tel_arg())
 
         def make_service(rid: str, journal, telemetry) -> JobService:
             tracker = ThroughputTracker(self.alpha)
@@ -414,9 +447,14 @@ class HeteroServeEngine:
             dead: set = set()
 
             def make_scheduler() -> DynamicScheduler:
+                wrap = None
+                if chaos is not None:
+                    def wrap(name, ex):
+                        return ChaosExecutor(ex, name, chaos)
                 sched = self._build_scheduler(exclude=dead,
                                               namespace=f"{rid}/",
-                                              telemetry=telemetry)
+                                              telemetry=telemetry,
+                                              wrap_executor=wrap)
                 sched.tracker = tracker
                 sched.ledger = ledger
                 return sched
@@ -449,7 +487,8 @@ class HeteroServeEngine:
         fed = FederatedService(make_service, rids, journal_dir,
                                tenants=tenants,
                                telemetry=self._tel_arg(),
-                               heartbeat_s=heartbeat_s)
+                               heartbeat_s=heartbeat_s,
+                               chaos=chaos)
         t0 = time.monotonic()
         fed.start()
         for job in jobs:

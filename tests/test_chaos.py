@@ -1,0 +1,451 @@
+"""Chaos plane: deterministic fault plans, injector semantics, and the
+hardening the soak flushed out (torn-tail truncation, per-line CRCs,
+bounded deferred retry, brownout shedding, dispatcher exception guard).
+"""
+import json
+import threading
+import time
+
+import pytest
+
+from repro import telemetry as telemetry_mod
+from repro.chaos import (ChaosExecutor, ChaosInjector, ChaosSink,
+                         FaultEvent, FaultPlan, KINDS)
+from repro.core import (Chunk, ChunkFailure, ChunkRecord, DeviceKind,
+                        DynamicScheduler, GroupSpec, SleepExecutor, Token)
+from repro.core.throughput import ThroughputTracker
+from repro.federation import ReplicaSink
+from repro.queue import (AdmissionController, Job, JobService, JobState,
+                         JournalStore, QueueManager)
+from repro.queue.admission import Decision
+from repro.runtime.fault_tolerance import Watchdog
+
+RIDS = ["r0", "r1", "r2"]
+GROUPS = [f"{r}/accel" for r in RIDS]
+
+
+# ---------------------------------------------------------------------------
+# plans: determinism + generator safety envelope
+# ---------------------------------------------------------------------------
+
+def test_same_seed_produces_byte_identical_plan():
+    a = FaultPlan.generate(11, 2.0, RIDS, GROUPS).to_json()
+    b = FaultPlan.generate(11, 2.0, RIDS, GROUPS).to_json()
+    assert a == b                      # replayability: --chaos-seed
+    assert a != FaultPlan.generate(12, 2.0, RIDS, GROUPS).to_json()
+
+
+def test_plan_json_roundtrip():
+    plan = FaultPlan.generate(3, 1.5, RIDS, GROUPS, events_per_s=4.0)
+    back = FaultPlan.from_json(plan.to_json())
+    assert back.events == plan.events
+    assert back.seed == plan.seed and back.horizon_s == plan.horizon_s
+
+
+def test_generator_respects_safety_envelope():
+    for seed in range(40):
+        plan = FaultPlan.generate(seed, 2.0, RIDS, GROUPS,
+                                  events_per_s=6.0)
+        kills = [e for e in plan.events
+                 if e.layer == "federation" and e.kind == "kill"]
+        assert len(kills) <= len(RIDS) - 1
+        assert len({k.target for k in kills}) == len(kills)
+        for k in kills:                # middle 60% — work exists to lose
+            assert 0.2 * plan.horizon_s <= k.at_s <= 0.8 * plan.horizon_s
+        mirrors = [e for e in plan.events if e.kind == "mirror_fail"]
+        for m in mirrors:              # replica gap never overlaps a
+            for k in kills:            # kill of the same runtime
+                if k.target == m.target:
+                    assert not (m.at_s <= k.at_s <= m.end_s)
+        for e in plan.events:
+            assert e.kind in KINDS[e.layer]
+
+
+# ---------------------------------------------------------------------------
+# injector: one-shot vs window semantics
+# ---------------------------------------------------------------------------
+
+def _fake_clock():
+    t = [0.0]
+    return t, (lambda: t[0])
+
+
+def test_one_shot_consumed_exactly_once():
+    t, clk = _fake_clock()
+    plan = FaultPlan.compose(
+        [FaultEvent(at_s=0.5, layer="executor", kind="chunk_exception",
+                    target="g")], horizon_s=1.0)
+    inj = ChaosInjector(plan, clock=clk)
+    inj.start()
+    assert inj.take("executor", "chunk_exception", "g") is None  # not due
+    t[0] = 0.6
+    assert inj.take("executor", "chunk_exception", "other") is None
+    assert inj.take("executor", "chunk_exception", "g") is not None
+    assert inj.take("executor", "chunk_exception", "g") is None  # consumed
+    assert inj.injected == 1
+
+
+def test_window_active_inside_range_counted_once():
+    t, clk = _fake_clock()
+    plan = FaultPlan.compose(
+        [FaultEvent(at_s=1.0, layer="executor", kind="slowdown",
+                    target="g", duration_s=0.5, magnitude=0.01)],
+        horizon_s=2.0)
+    inj = ChaosInjector(plan, clock=clk)
+    inj.start()
+    t[0] = 0.9
+    assert inj.active("executor", "slowdown", "g") is None
+    t[0] = 1.2
+    assert inj.active("executor", "slowdown", "g") is not None
+    assert inj.active("executor", "slowdown", "g") is not None
+    assert inj.injected == 1           # window counted once, not per query
+    t[0] = 1.6
+    assert inj.active("executor", "slowdown", "g") is None
+    t[0] = 2.1
+    assert inj.done()
+
+
+def test_nothing_fires_before_start():
+    plan = FaultPlan.compose(
+        [FaultEvent(at_s=0.0, layer="executor", kind="chunk_exception",
+                    target="g")], horizon_s=1.0)
+    inj = ChaosInjector(plan)
+    assert inj.take("executor", "chunk_exception", "g") is None
+    assert inj.active("executor", "chunk_exception", "g") is None
+
+
+def test_skewed_clock_applies_inside_window_only():
+    t, clk = _fake_clock()
+    plan = FaultPlan.compose(
+        [FaultEvent(at_s=1.0, layer="queue", kind="clock_skew",
+                    target="r0", duration_s=1.0, magnitude=0.25)],
+        horizon_s=3.0)
+    inj = ChaosInjector(plan, clock=clk)
+    inj.start()
+    base_t = [100.0]
+    skewed = inj.skewed_clock("r0", base=lambda: base_t[0])
+    assert skewed() == 100.0
+    t[0] = 1.5
+    assert skewed() == pytest.approx(100.25)
+    t[0] = 2.5
+    assert skewed() == 100.0
+
+
+def test_wrap_queue_swallows_notifies_inside_window():
+    t, clk = _fake_clock()
+    plan = FaultPlan.compose(
+        [FaultEvent(at_s=1.0, layer="queue", kind="listener_drop",
+                    target="r0", duration_s=1.0)], horizon_s=3.0)
+    inj = ChaosInjector(plan, clock=clk)
+    inj.start()
+    queue = inj.wrap_queue(QueueManager(), "r0")
+    hits = []
+    queue.add_listener(lambda *a: hits.append(1))
+    j = Job(items=4)
+    j.transition(JobState.ADMITTED)
+    queue.put(j)
+    assert len(hits) == 1              # outside the window: delivered
+    t[0] = 1.5
+    j2 = Job(items=4)
+    j2.transition(JobState.ADMITTED)
+    queue.put(j2)
+    assert len(hits) == 1              # swallowed inside the window
+
+
+# ---------------------------------------------------------------------------
+# executor faults
+# ---------------------------------------------------------------------------
+
+def _token(group="g", size=16):
+    return Token(Chunk(0, size), group, DeviceKind.ACCEL)
+
+
+def test_chunk_exception_raises_in_band_failure():
+    plan = FaultPlan.compose(
+        [FaultEvent(at_s=0.0, layer="executor", kind="chunk_exception",
+                    target="g")], horizon_s=1.0)
+    inj = ChaosInjector(plan)
+    inj.start()
+    cx = ChaosExecutor(SleepExecutor(rate=1e6), "g", inj)
+    tok = _token()
+    with pytest.raises(ChunkFailure):
+        cx.execute(tok, ChunkRecord(tok))
+    cx.execute(tok, ChunkRecord(tok))  # one-shot: next chunk is clean
+
+
+def test_hang_trips_watchdog_mid_sleep():
+    plan = FaultPlan.compose(
+        [FaultEvent(at_s=0.0, layer="executor", kind="hang",
+                    target="g", magnitude=0.5)], horizon_s=1.0)
+    inj = ChaosInjector(plan)
+    inj.start()
+    tracker = ThroughputTracker()
+    tracker.seed("g", 1e6)
+    wd = Watchdog(tracker, timeout_factor=1.0, min_timeout_s=0.05)
+    cx = ChaosExecutor(SleepExecutor(rate=1e6), "g", inj, watchdog=wd)
+    tok = _token()
+    th = threading.Thread(target=cx.execute, args=(tok, ChunkRecord(tok)))
+    th.start()
+    dead = []
+    deadline = time.monotonic() + 2.0
+    while not dead and time.monotonic() < deadline:
+        dead = wd.check()
+        time.sleep(0.01)
+    th.join()
+    assert dead == ["g"]               # declared dead while wedged
+    wd.revive("g")                     # rebuild path: verdict cleared
+    assert wd.check() == []
+
+
+# ---------------------------------------------------------------------------
+# journal hardening: torn tails, CRCs, mirror detach/resync
+# ---------------------------------------------------------------------------
+
+def _write_journal(path, n=3):
+    journal = JournalStore(str(path))
+    jobs = []
+    for i in range(n):
+        j = Job(items=8, tenant=f"t{i}")
+        journal.record(j, "submitted")
+        j.transition(JobState.ADMITTED)
+        journal.record(j)
+        jobs.append(j)
+    return journal, jobs
+
+
+def test_torn_final_line_truncated_on_reopen(tmp_path):
+    path = tmp_path / "j.jsonl"
+    journal, jobs = _write_journal(path)
+    journal.tear_tail()                # crash artifact: no newline
+    journal.close()
+    raw = path.read_bytes()
+    assert not raw.endswith(b"\n")
+    re = JournalStore(str(path))
+    assert re.torn_truncations == 1
+    replayed = JournalStore.replay(str(path))
+    assert set(replayed) == {j.job_id for j in jobs}
+    assert all(j.state == JobState.ADMITTED for j in replayed.values())
+    j = Job(items=4)                   # journal still appendable after
+    re.record(j, "submitted")
+    re.close()
+    assert path.read_bytes().endswith(b"\n")
+
+
+def test_crc_mismatch_skips_line_and_counts(tmp_path):
+    path = tmp_path / "j.jsonl"
+    journal, jobs = _write_journal(path)
+    journal.close()
+    lines = path.read_text().splitlines()
+    # valid JSON, stale CRC: flip the recorded state of the last record
+    rec = json.loads(lines[-1])
+    rec["job"]["state"] = "failed"
+    lines[-1] = json.dumps(rec, sort_keys=True)
+    path.write_text("\n".join(lines) + "\n")
+    replayed, stats = JournalStore.replay_stats(str(path))
+    assert stats["crc_failures"] == 1
+    assert stats["skipped"] == 1
+    # the tampered line is ignored: the job keeps its last intact state
+    # (the "submitted" record, written while it was still PENDING)
+    assert replayed[jobs[-1].job_id].state == JobState.PENDING
+
+
+def test_unreadable_garbage_line_skipped(tmp_path):
+    path = tmp_path / "j.jsonl"
+    journal, jobs = _write_journal(path)
+    journal.close()
+    with open(path, "a", encoding="utf-8") as fh:
+        fh.write("#CHAOS# not json at all\n")
+    replayed, stats = JournalStore.replay_stats(str(path))
+    assert stats["skipped"] == 1
+    assert set(replayed) == {j.job_id for j in jobs}
+
+
+class _FailingSink:
+    path = None
+
+    def append(self, line):
+        raise OSError("chaos: mirror down")
+
+    def rewrite(self, lines):
+        raise OSError("chaos: mirror down")
+
+    def close(self):
+        pass
+
+
+def test_mirror_write_failure_detaches_then_resyncs(tmp_path):
+    journal = JournalStore(str(tmp_path / "p.jsonl"))
+    journal.attach_mirror(_FailingSink())
+    assert journal.has_mirror()
+    j = Job(items=8)
+    journal.record(j, "submitted")     # sink raises -> detach, not crash
+    assert not journal.has_mirror()
+    assert journal.mirror_detaches == 1
+    j.transition(JobState.ADMITTED)
+    journal.record(j)                  # unmirrored writes keep working
+    sink = ReplicaSink(str(tmp_path / "replica.jsonl"))
+    journal.resync_mirror(sink)
+    assert journal.has_mirror()
+    journal.close()
+    replica = JournalStore.replay(str(tmp_path / "replica.jsonl"))
+    primary = JournalStore.replay(str(tmp_path / "p.jsonl"))
+    assert {jid: jb.state for jid, jb in replica.items()} \
+        == {jid: jb.state for jid, jb in primary.items()}
+
+
+def test_chaos_sink_fails_only_inside_window(tmp_path):
+    t, clk = _fake_clock()
+    plan = FaultPlan.compose(
+        [FaultEvent(at_s=1.0, layer="federation", kind="mirror_fail",
+                    target="r0", duration_s=1.0)], horizon_s=3.0)
+    inj = ChaosInjector(plan, clock=clk)
+    inj.start()
+    sink = ChaosSink(ReplicaSink(str(tmp_path / "r.jsonl")), "r0", inj)
+    sink.append("ok-line")
+    t[0] = 1.5
+    with pytest.raises(OSError):
+        sink.append("dropped")
+    t[0] = 2.5
+    sink.append("ok-again")
+    sink.close()
+    assert (tmp_path / "r.jsonl").read_text().splitlines() \
+        == ["ok-line", "ok-again"]
+
+
+# ---------------------------------------------------------------------------
+# service hardening: bounded deferred retry, brownout, transitions
+# ---------------------------------------------------------------------------
+
+def test_pending_to_failed_is_legal():
+    j = Job(items=1)
+    j.transition(JobState.FAILED)      # retry-budget exhaustion path
+    assert j.state == JobState.FAILED
+
+
+def test_retry_budget_exhaustion_goes_terminal_failed(vclock):
+    tel = telemetry_mod.Telemetry()
+    queue = QueueManager()
+    # no groups joined -> capacity pinned at min -> always DEFER (the
+    # infinite defer_factor keeps the gate from rejecting outright)
+    adm = AdmissionController(queue, slo_delay_s=0.001,
+                              defer_factor=float("inf"),
+                              clock=vclock.now, telemetry=tel)
+    svc = JobService(lambda: None, queue=queue, admission=adm,
+                     retry_budget=4, retry_base_s=0.01, retry_max_s=0.05,
+                     clock=vclock.now, sleep=vclock.sleep, telemetry=tel)
+    blocker = Job(items=500)           # standing backlog: delay >> slo
+    blocker.transition(JobState.ADMITTED)
+    queue.put(blocker)
+    job = Job(items=100)
+    dec = svc.submit(job)
+    assert dec.decision == Decision.DEFER
+    for _ in range(10):
+        svc.retry_deferred()
+        vclock.advance(0.2)            # past any jittered backoff
+    assert job.state == JobState.FAILED
+    assert "retry budget exhausted" in job.meta["failure"]
+    assert job.meta["retries"] == 4
+    c = tel.snapshot()["counters"]
+    assert c.get('svc.retries{cause="exhausted"}') == 1
+    assert c.get('svc.retries{cause="deferred"}') == 4
+
+
+def test_retry_backoff_gates_reoffers(vclock):
+    queue = QueueManager()
+    adm = AdmissionController(queue, slo_delay_s=0.001,
+                              defer_factor=float("inf"), clock=vclock.now)
+    svc = JobService(lambda: None, queue=queue, admission=adm,
+                     retry_budget=50, retry_base_s=1.0, retry_max_s=8.0,
+                     clock=vclock.now, sleep=vclock.sleep)
+    blocker = Job(items=500)
+    blocker.transition(JobState.ADMITTED)
+    queue.put(blocker)
+    job = Job(items=100)
+    svc.submit(job)
+    svc.retry_deferred()               # first re-offer: immediate
+    assert job.meta["retries"] == 1
+    svc.retry_deferred()               # backoff window not elapsed
+    assert job.meta["retries"] == 1
+    vclock.advance(2.0)                # base 1s, jitter <= 1.5x
+    svc.retry_deferred()
+    assert job.meta["retries"] == 2
+
+
+def test_brownout_sheds_batch_then_standard_then_urgent(vclock):
+    tel = telemetry_mod.Telemetry()
+    queue = QueueManager()
+    adm = AdmissionController(queue, slo_delay_s=0.01, clock=vclock.now,
+                              telemetry=tel)
+    svc = JobService(lambda: None, queue=queue, admission=adm,
+                     brownout_factor=2.0, brownout_after_s=0.5,
+                     clock=vclock.now, sleep=vclock.sleep, telemetry=tel)
+    jobs = {}
+    for tier in ("urgent", "standard", "batch"):
+        j = Job(items=300, tier=tier)
+        j.transition(JobState.ADMITTED)
+        queue.put(j)
+        jobs[tier] = j
+    svc._check_brownout()              # arms the sustained-overload timer
+    assert all(j.state == JobState.ADMITTED for j in jobs.values())
+    vclock.advance(0.6)
+    svc._check_brownout()              # level 1: batch shed first
+    assert jobs["batch"].state == JobState.CANCELLED
+    assert jobs["batch"].meta["brownout"] is True
+    assert jobs["standard"].state == JobState.ADMITTED
+    assert jobs["urgent"].state == JobState.ADMITTED
+    vclock.advance(0.5)
+    svc._check_brownout()              # level 2: standard
+    assert jobs["standard"].state == JobState.CANCELLED
+    assert jobs["urgent"].state == JobState.ADMITTED
+    vclock.advance(0.5)
+    svc._check_brownout()              # level 3: urgent last
+    assert jobs["urgent"].state == JobState.CANCELLED
+    c = tel.snapshot()["counters"]
+    assert c.get('svc.brownout{tier="batch"}') == 1
+    assert c.get('svc.brownout{tier="urgent"}') == 1
+    svc._check_brownout()              # queue empty -> delay 0 -> reset
+    assert svc._brownout_level == 0 and svc._brownout_since is None
+
+
+# ---------------------------------------------------------------------------
+# dispatcher exception guard: a poisoned executor kills its group, not
+# the service
+# ---------------------------------------------------------------------------
+
+class _PoisonedExecutor(SleepExecutor):
+    def execute(self, token, rec):
+        raise RuntimeError("poisoned: not a ChunkFailure")
+
+
+def test_poisoned_executor_fails_group_and_service_survives():
+    tel = telemetry_mod.Telemetry()
+    name = "g0"
+
+    def make_sched():
+        groups = {name: GroupSpec(name, DeviceKind.ACCEL, fixed_chunk=16,
+                                  init_throughput=1000.0)}
+        return DynamicScheduler(groups,
+                                {name: _PoisonedExecutor(rate=1000.0)},
+                                telemetry=tel)
+
+    svc = JobService(make_sched, batch_jobs=1, poll_s=0.002,
+                     telemetry=tel)
+    job = Job(items=32, max_attempts=2)
+    svc.submit(job)
+    assert svc.run_until_idle(timeout_s=20)
+    svc.close()
+    # work conserved into a terminal verdict, not stuck or lost
+    assert job.state == JobState.FAILED
+    c = tel.snapshot()["counters"]
+    assert c.get(f'sched.dispatcher_errors{{group="{name}"}}', 0) >= 1
+
+
+def test_run_seed_composed_drill_invariants(tmp_path):
+    """End-to-end: the smoke drill (gossip delay + hang + kill) under
+    the soak harness's zero-loss / zero-dupe / bounded-recovery checks."""
+    chaos_soak = pytest.importorskip("benchmarks.chaos_soak")
+    r = chaos_soak.run_seed(-1, runtimes=2, n_jobs=12,
+                            plan=chaos_soak.composed_plan(),
+                            directory=str(tmp_path))
+    assert r["done"] + r["failed"] + r["cancelled"] == r["jobs"] == 12
+    assert r["kills"] == 1

@@ -453,3 +453,127 @@ def test_router_capacity_share_attracts_proportionally():
         rid = r.place(f"k{i}", loads)
         loads[rid] = loads.get(rid, 0.0) + 1.0
     assert loads["big"] > loads["small"] * 4
+
+
+# ---------------------------------------------------------------------------
+# replication failure paths (chaos-plane satellites): mirror detach +
+# gossip-round heal, and racing kill_runtime calls
+# ---------------------------------------------------------------------------
+
+def test_mirror_fail_window_detaches_then_gossip_heals(tmp_path):
+    from repro.chaos import ChaosInjector, FaultEvent, FaultPlan
+
+    tel = telemetry_mod.Telemetry()
+    plan = FaultPlan.compose(
+        [FaultEvent(at_s=0.0, layer="federation", kind="mirror_fail",
+                    target="r0", duration_s=0.4)], horizon_s=0.6)
+    inj = ChaosInjector(plan, telemetry=tel)
+    fed = make_fed(2, tmp_path, rate=5_000.0, telemetry=tel, chaos=inj)
+    fed.start()
+    # journal writes land inside the window on every runtime: r0's
+    # mirror raises and detaches (the journal's contract for a bad sink)
+    t0 = time.monotonic()
+    i = 0
+    while time.monotonic() - t0 < 0.45:
+        fed.submit(Job(items=16, tenant=f"t{i % 16}"))
+        i += 1
+        time.sleep(0.01)
+    assert fed._nodes["r0"].journal.mirror_detaches >= 1
+    while not inj.done():
+        time.sleep(0.01)
+    fed.gossip_round()                     # window passed -> heal fires
+    assert fed._nodes["r0"].journal.has_mirror()
+    assert fed.run_until_idle(timeout_s=30)
+    fed.close()
+    assert all(j.state == JobState.DONE for j in fed._jobs.values())
+    c = tel.snapshot()["counters"]
+    assert c.get('fed.mirror_resyncs{runtime="r0"}', 0) >= 1
+    # post-heal replica replays to the same per-job final states as the
+    # primary (resync rewrote it from the journal's live state)
+    ring = fed.ring
+    primary = JournalStore.replay(ring.journal_path("r0"))
+    replica = JournalStore.replay(ring.replica_path("r0"))
+    assert {j: s.state for j, s in replica.items()} \
+        == {j: s.state for j, s in primary.items()}
+
+
+def _drain_some(fed, jobs, want=6, timeout=30.0):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if sum(1 for j in jobs if j.state == JobState.DONE) >= want:
+            return
+        time.sleep(0.005)
+    raise AssertionError("fixture never drained far enough")
+
+
+def test_concurrent_kills_of_distinct_runtimes_lose_nothing(tmp_path):
+    import threading
+
+    fed = make_fed(3, tmp_path, rate=2_000.0)
+    jobs = [Job(items=40, tenant=f"t{i % 12}") for i in range(36)]
+    for j in jobs:
+        fed.submit(j)
+    fed.start()
+    _drain_some(fed, jobs)
+    # r1's replica lives on r2 and r2's on r0: killing both at once
+    # exercises the kill serialization AND the survivor walk past a
+    # dead peer (whichever kill loses the lock race hands off to r0)
+    results = {}
+    ts = [threading.Thread(
+        target=lambda r=r: results.setdefault(r, fed.kill_runtime(r)))
+        for r in ("r1", "r2")]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert fed.run_until_idle(timeout_s=30)
+    fed.close()
+    final = fed._jobs
+    assert len(final) == 36
+    assert all(j.state == JobState.DONE for j in final.values())
+    assert sorted(fed._killed) == ["r1", "r2"]
+    # every recovered job rematerialized onto the sole survivor
+    for r in ("r1", "r2"):
+        for j in results[r]:
+            assert fed._placement[j.job_id] == "r0"
+    # zero duplicate completions across the primaries (double-replay
+    # guard): no job id carries two ``done`` records
+    import json as json_mod
+    done_counts = {}
+    for p in tmp_path.glob("*.journal.jsonl"):
+        for line in p.read_text().splitlines():
+            try:
+                rec = json_mod.loads(line)
+            except ValueError:
+                continue
+            if rec.get("event") == "done":
+                jid = rec["job"]["job_id"]
+                done_counts[jid] = done_counts.get(jid, 0) + 1
+    assert all(c == 1 for c in done_counts.values())
+
+
+def test_racing_kills_of_same_runtime_fire_once(tmp_path):
+    import threading
+
+    fed = make_fed(3, tmp_path, rate=2_000.0)
+    jobs = [Job(items=40, tenant=f"t{i % 12}") for i in range(24)]
+    for j in jobs:
+        fed.submit(j)
+    fed.start()
+    _drain_some(fed, jobs)
+    results = []
+    ts = [threading.Thread(
+        target=lambda: results.append(fed.kill_runtime("r1")))
+        for _ in range(2)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    # exactly one caller performed the failover; the loser saw a dead
+    # runtime and recovered nothing (no double replay)
+    assert sorted(len(r) for r in results)[0] == 0
+    assert fed._killed == ["r1"]
+    assert fed.report().failovers == 1
+    assert fed.run_until_idle(timeout_s=30)
+    fed.close()
+    assert all(j.state == JobState.DONE for j in fed._jobs.values())
